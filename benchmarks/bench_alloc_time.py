@@ -1,0 +1,69 @@
+"""Fig. 3 reproduction (allocation-latency component): pool search vs O(1)
+planned addresses.
+
+The paper's speedups come from replacing the pool's free-list search with a
+precomputed-address return.  We replay identical event streams through the
+Chainer-style pool, the naive allocator and the planned arena and report
+us/event + the pool's search-steps/alloc (the quantity that grows with pool
+fragmentation and caused the paper's seq2seq slowdown).
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import ArenaAllocator, MemoryRecorder, NaiveAllocator, \
+    PoolAllocator, replay
+from repro.core.events import make_profile
+
+
+def synth_profile(n_blocks: int, seed: int = 0):
+    rng = random.Random(seed)
+    items = []
+    t = 0
+    for _ in range(n_blocks):
+        start = t + rng.randint(0, 2)
+        dur = rng.randint(1, 60)
+        size = rng.choice([4096, 65536, 1 << 20, 4 << 20, 16 << 20])
+        items.append((size, start, start + dur))
+        t += 1
+    return make_profile(items)
+
+
+def arena_replay(profile) -> dict:
+    """Replay through the planned arena: alloc = table lookup (O(1))."""
+    arena = ArenaAllocator(profile)
+    order = sorted(profile.blocks, key=lambda b: b.bid)
+    t0 = time.perf_counter()
+    arena.reset_iteration()
+    for b in order:
+        arena.alloc(b.size)
+    dt = time.perf_counter() - t0
+    return {"seconds": dt, "per_event_us": 1e6 * dt / max(1, len(order)),
+            "peak": arena.peak}
+
+
+def rows(quick: bool = False):
+    out = []
+    for n in ([500] if quick else [500, 2000, 8000]):
+        prof = synth_profile(n)
+        pool = replay(prof, PoolAllocator())
+        naive = replay(prof, NaiveAllocator())
+        arena = arena_replay(prof)
+        out.append((f"n{n}/pool", pool["per_event_us"],
+                    f"search_steps_per_alloc={pool['search_steps'] / n:.1f}"))
+        out.append((f"n{n}/naive", naive["per_event_us"],
+                    f"peak_B={naive['peak']}"))
+        out.append((f"n{n}/arena", arena["per_event_us"],
+                    f"speedup_vs_pool={pool['per_event_us'] / max(arena['per_event_us'], 1e-9):.1f}x"))
+    return out
+
+
+def main(quick: bool = False):
+    print("# Fig3: name,us_per_call,derived")
+    for name, us, derived in rows(quick):
+        print(f"fig3/{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Fig. 2 reproduction: memory consumption, orig (pool) vs opt (DSA).
+
+Profiles are real jaxpr traces: the paper-native CNNs (AlexNet / ResNet-50 /
+Inception-ResNet) for training at mini-batch 32/64/128 and inference, the
+paper-native seq2seq, and the assigned LM archs (reduced layer counts at real
+widths, so the trace has per-layer structure).  Columns: naive (network-wise),
+pool (Chainer-style), DSA (paper), saving%, and the retained (red-bar) bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.paper_native import CNNS, SEQ2SEQ
+from repro.core import MemoryPlanner, profile_fn
+from repro.models import Transformer, cnn as cnn_lib, seq2seq as s2s_lib
+
+
+def _row(name, prof):
+    rep = MemoryPlanner().report(prof)
+    naive = rep.baselines["naive_peak"]
+    pool = rep.baselines["pool_peak"]
+    dsa = rep.plan.peak
+    save = 100.0 * (1 - dsa / pool) if pool else 0.0
+    return (name, prof.n, naive, pool, dsa, save, prof.retained_bytes,
+            rep.quality["gap_ratio"])
+
+
+def rows(quick: bool = False):
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    # --- paper CNNs: train at 3 mini-batch sizes + inference ------------------
+    batches = [8] if quick else [32, 64]
+    img = 64 if quick else 96
+    for cname in (["paper-alexnet"] if quick else
+                  ["paper-alexnet", "paper-resnet50", "paper-inception-resnet"]):
+        ccfg = dataclasses.replace(CNNS[cname], img=img)
+        params = cnn_lib.init_cnn(ccfg, key)
+        for bsz in batches:
+            x = jax.ShapeDtypeStruct((bsz, img, img, 3), jnp.float32)
+            lbl = jax.ShapeDtypeStruct((bsz,), jnp.int32)
+            prof = profile_fn(cnn_lib.train_step_fn(ccfg), params, x, lbl)
+            out.append(_row(f"{cname}/train/b{bsz}", prof))
+        xi = jax.ShapeDtypeStruct((1, img, img, 3), jnp.float32)
+        prof = profile_fn(lambda p, a: cnn_lib.cnn_forward(p, a, ccfg), params, xi)
+        out.append(_row(f"{cname}/infer", prof))
+
+    # --- paper seq2seq ----------------------------------------------------------
+    s2cfg = dataclasses.replace(SEQ2SEQ, vocab=4000, d_model=128,
+                                max_len=12 if quick else 30,
+                                infer_len=10 if quick else 40)
+    p2 = s2s_lib.init_seq2seq(s2cfg, key)
+    for bsz in ([8] if quick else [32, 64]):
+        src = jax.ShapeDtypeStruct((bsz, s2cfg.max_len), jnp.int32)
+        tgt = jax.ShapeDtypeStruct((bsz, s2cfg.max_len), jnp.int32)
+        prof = profile_fn(s2s_lib.train_step_fn(s2cfg), p2, src, tgt)
+        out.append(_row(f"paper-seq2seq/train/b{bsz}", prof))
+    src1 = jax.ShapeDtypeStruct((1, s2cfg.max_len), jnp.int32)
+    prof = profile_fn(s2s_lib.infer_fn(s2cfg), p2, src1)
+    out.append(_row("paper-seq2seq/infer", prof))
+
+    # --- assigned archs (reduced depth, real width, unrolled trace) -------------
+    archs = ["qwen2-0.5b"] if quick else [
+        "qwen2-0.5b", "phi4-mini-3.8b", "granite-moe-1b-a400m", "mamba2-130m"]
+    for arch in archs:
+        cfg = get_config(arch)
+        np_ = len(cfg.block_pattern)
+        cfg = cfg.with_overrides(n_layers=2 * np_ + len(cfg.tail_pattern))
+        model = Transformer(cfg)
+        params_sds = model.abstract()
+        bsz, seq = (2, 64) if quick else (4, 256)
+        batch = {"tokens": jax.ShapeDtypeStruct((bsz, seq + 1), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (bsz, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+
+        def loss_only(p, b):
+            return model.loss_fn(p, b, remat=False)[0]
+
+        prof = profile_fn(loss_only, params_sds, batch)
+        out.append(_row(f"{arch}/train(2L)/b{bsz}", prof))
+    return out
+
+
+def main(quick: bool = False):
+    print("# Fig2: name,n_blocks,naive_B,pool_B,dsa_B,saving_vs_pool_pct,"
+          "retained_B,gap_vs_LB")
+    for r in rows(quick):
+        print(f"fig2/{r[0]},{r[1]},{r[2]},{r[3]},{r[4]},{r[5]:.1f},{r[6]},"
+              f"{r[7]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Roofline report over dry-run artifacts (CLI for EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline --dir results/dryrun \
+      [--mesh single|multi|all] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.launch import roofline
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="results/dryrun")
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--csv", action="store_true")
+    args = p.parse_args()
+    mesh = None if args.mesh == "all" else args.mesh
+    cells = roofline.load_cells(args.dir, mesh=mesh)
+    print(roofline.table(cells, fmt="csv" if args.csv else "md"))
+
+
+if __name__ == "__main__":
+    main()

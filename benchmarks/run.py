@@ -1,0 +1,65 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  fig2    memory consumption, orig(pool) vs opt(DSA)       (paper Fig. 2)
+  fig3    allocation latency, pool search vs O(1) arena    (paper Fig. 3)
+  fig4    heuristic runtime + exact-vs-heuristic objective (paper Fig. 4/§5.2)
+  sec53   seq2seq variable-length reoptimization           (paper §5.3)
+  serve   beyond-paper: DSA on LLM serving KV traces
+  roofline (optional, needs results/dryrun)                (EXPERIMENTS §Roofline)
+
+Prints ``name,us_per_call,derived`` CSV per line.
+Env: BENCH_QUICK=1 for the fast variant (used by CI/tests).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    quick = bool(int(os.environ.get("BENCH_QUICK", "0")))
+    from . import (bench_alloc_time, bench_heuristic, bench_memory,
+                   bench_reopt, bench_serving)
+    sections = [
+        ("fig2", bench_memory.main),
+        ("fig3", bench_alloc_time.main),
+        ("fig4", bench_heuristic.main),
+        ("sec53", bench_reopt.main),
+        ("serve", bench_serving.main),
+    ]
+    failures = 0
+    for name, fn in sections:
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+            print(f"# section {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"# section {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+
+    # roofline section (only if dry-run artifacts exist)
+    dr = os.environ.get("DRYRUN_DIR", "results/dryrun")
+    if os.path.isdir(dr):
+        try:
+            from repro.launch import roofline
+            cells = roofline.load_cells(dr, mesh="single")
+            print("# Roofline: name,us_per_call,derived")
+            for c in cells:
+                dom_s = {"compute": c.compute_s, "memory": c.memory_s,
+                         "collective": c.coll_s}[c.dominant]
+                print(f"roofline/{c.arch}/{c.shape},{dom_s * 1e6:.1f},"
+                      f"dominant={c.dominant};compute_s={c.compute_s:.4g};"
+                      f"memory_s={c.memory_s:.4g};coll_s={c.coll_s:.4g};"
+                      f"useful_ratio={c.useful_ratio:.3f}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Batched serving example: DSA-planned KV arena + slot-based decode engine.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch qwen2-0.5b --requests 6
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

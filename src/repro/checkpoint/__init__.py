@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, config_hash
+
+__all__ = ["Checkpointer", "config_hash"]

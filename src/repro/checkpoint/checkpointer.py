@@ -1,0 +1,131 @@
+"""Async, atomic, mesh-independent checkpointing.
+
+Layout: <dir>/step_<N>/  arrays.npz-style per-leaf .npy files + manifest.json
+(step, flat key paths, config hash, mesh shape).  Writes go to a tmp dir that
+is atomically renamed, so a crash mid-save never corrupts the latest
+checkpoint; `latest_step` scans completed manifests only.  Saving runs on a
+background thread (async) with a `wait()` barrier; restore reshards onto any
+mesh via device_put with the target shardings (elastic N->M restore).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        # Snapshot to host memory on the caller's thread (device buffers may
+        # be donated right after this call returns).
+        flat, _ = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+
+        def work():
+            try:
+                tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}")
+                final = os.path.join(self.dir, f"step_{step:08d}")
+                os.makedirs(tmp, exist_ok=True)
+                for k, v in host.items():
+                    np.save(os.path.join(tmp, k.replace("/", "__") + ".npy"), v)
+                manifest = {
+                    "step": step,
+                    "keys": sorted(host.keys()),
+                    "time": time.time(),
+                    "meta": meta or {},
+                }
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                manifest = os.path.join(self.dir, name, "manifest.json")
+                if os.path.exists(manifest):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of ``like`` (reshards onto ``shardings``)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_like, treedef = _flatten(like)
+        assert sorted(flat_like.keys()) == manifest["keys"], \
+            "checkpoint/param structure mismatch"
+        leaves = []
+        flat_sh, _ = _flatten(shardings) if shardings is not None else ({}, None)
+        for key in sorted(flat_like.keys()):
+            arr = np.load(os.path.join(path, key.replace("/", "__") + ".npy"))
+            sh = flat_sh.get(key)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else
+                          jax.numpy.asarray(arr))
+        ordered = {k: v for k, v in zip(sorted(flat_like.keys()), leaves)}
+        # unflatten in original leaf order
+        vals = [ordered[k] for k in flat_like.keys()]
+        return jax.tree_util.tree_unflatten(treedef, vals)
+
+    def meta(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)["meta"]
+
+
+def config_hash(obj: Any) -> str:
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]

@@ -1,0 +1,33 @@
+"""Core of the reproduction: profile-guided DSA memory optimization.
+
+Paper: "Profile-guided memory optimization for deep neural networks"
+(Sekiyama, Imai, Imamichi, Raymond; 2018).
+
+Public API:
+  - events: Block, MemoryProfile, make_profile
+  - liveness: profile_fn / profile_jaxpr (static profiler; the JAX analogue
+    of the paper's sample run)
+  - profiler: MemoryRecorder (runtime recorder with interrupt/resume)
+  - bestfit.best_fit, exact.solve_exact, mip.to_lp (solvers, §3)
+  - arena.ArenaAllocator (O(1) planned allocation + reoptimization, §4)
+  - pool: PoolAllocator / NaiveAllocator baselines (§2, §5.1)
+  - planner.MemoryPlanner (framework-level planning services)
+"""
+from .arena import ArenaAllocator
+from .bestfit import best_fit
+from .dsa import AllocationPlan, PlanValidationError, plan_quality, validate_plan
+from .events import Block, MemoryProfile, align, make_profile
+from .exact import solve_exact
+from .liveness import profile_fn, profile_jaxpr
+from .mip import to_lp
+from .planner import MemoryPlanner, PlanReport
+from .pool import NaiveAllocator, PoolAllocator, replay
+from .profiler import MemoryRecorder
+
+__all__ = [
+    "AllocationPlan", "ArenaAllocator", "Block", "MemoryPlanner", "MemoryProfile",
+    "MemoryRecorder", "NaiveAllocator", "PlanReport", "PlanValidationError",
+    "PoolAllocator", "align", "best_fit", "make_profile", "plan_quality",
+    "profile_fn", "profile_jaxpr", "replay", "solve_exact", "to_lp",
+    "validate_plan",
+]

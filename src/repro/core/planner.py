@@ -1,0 +1,114 @@
+"""MemoryPlanner — the paper's workflow as a first-class framework service.
+
+profile (jaxpr liveness or recorded events) -> DSA solve (best-fit / exact)
+-> validated AllocationPlan, plus the TPU-specific planning services built on
+top of it: VMEM-budget checks for Pallas kernels, HBM feasibility / maximum
+mini-batch search (the paper's "larger mini-batch" benefit, automated), and
+side-by-side comparison against the pool/naive baselines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from .bestfit import best_fit
+from .dsa import AllocationPlan, plan_quality, validate_plan
+from .events import MemoryProfile
+from .exact import solve_exact
+from .liveness import profile_fn
+from .pool import NaiveAllocator, PoolAllocator, replay
+
+# TPU v5e physical budgets (DESIGN.md §8.2).
+VMEM_BYTES = 16 * 1024 * 1024          # ~16 MiB per core
+HBM_BYTES = 16 * 1024 ** 3             # 16 GiB per chip
+PEAK_FLOPS_BF16 = 197e12               # per chip
+HBM_BW = 819e9                         # bytes/s
+ICI_BW = 50e9                          # bytes/s/link
+
+_SOLVERS: dict[str, Callable[[MemoryProfile], AllocationPlan]] = {
+    "bestfit": best_fit,
+    "exact": solve_exact,
+}
+
+
+@dataclass
+class PlanReport:
+    profile: MemoryProfile
+    plan: AllocationPlan
+    quality: dict
+    baselines: dict
+
+
+class MemoryPlanner:
+    def __init__(self, solver: str = "bestfit"):
+        if solver not in _SOLVERS:
+            raise ValueError(f"unknown solver {solver!r}; have {sorted(_SOLVERS)}")
+        self.solver_name = solver
+        self.solver = _SOLVERS[solver]
+
+    # -- core workflow ---------------------------------------------------------
+    def plan(self, profile: MemoryProfile) -> AllocationPlan:
+        plan = self.solver(profile)
+        validate_plan(profile, plan)
+        return plan
+
+    def plan_fn(self, fn: Callable, *args, **kwargs) -> PlanReport:
+        """Profile a python/JAX function via jaxpr liveness, solve, compare."""
+        profile = profile_fn(fn, *args, **kwargs)
+        return self.report(profile)
+
+    def report(self, profile: MemoryProfile) -> PlanReport:
+        plan = self.plan(profile)
+        pool = replay(profile, PoolAllocator())
+        naive = replay(profile, NaiveAllocator())
+        return PlanReport(
+            profile=profile,
+            plan=plan,
+            quality=plan_quality(profile, plan),
+            baselines={
+                "pool_peak": pool["peak"], "pool_us_per_event": pool["per_event_us"],
+                "naive_peak": naive["peak"],
+                "saving_vs_pool": 1.0 - plan.peak / pool["peak"] if pool["peak"] else 0.0,
+            },
+        )
+
+    # -- TPU planning services ---------------------------------------------------
+    @staticmethod
+    def vmem_footprint(block_shapes: Iterable[tuple[Sequence[int], np.dtype]],
+                       buffering: int = 2) -> int:
+        """Bytes of VMEM a Pallas kernel's per-step working set occupies.
+
+        ``buffering=2`` accounts for the default double-buffered pipeline.
+        """
+        total = 0
+        for shape, dtype in block_shapes:
+            n = int(np.prod(shape)) if len(tuple(shape)) else 1
+            total += n * np.dtype(dtype).itemsize
+        return total * buffering
+
+    @classmethod
+    def check_vmem(cls, block_shapes, buffering: int = 2,
+                   budget: int = VMEM_BYTES) -> dict:
+        used = cls.vmem_footprint(block_shapes, buffering)
+        return {"bytes": used, "budget": budget, "fits": used <= budget,
+                "utilization": used / budget}
+
+    def max_feasible_batch(self, bytes_at_batch: Callable[[int], int],
+                           hbm_budget: int = HBM_BYTES,
+                           lo: int = 1, hi: int = 65536) -> int:
+        """Largest batch whose planned per-device peak fits the HBM budget.
+
+        ``bytes_at_batch(b)`` must be monotone in ``b`` (it typically wraps a
+        profile-and-plan of the step at mini-batch ``b``).
+        """
+        if bytes_at_batch(lo) > hbm_budget:
+            return 0
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if bytes_at_batch(mid) <= hbm_budget:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo

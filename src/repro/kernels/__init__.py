@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots: flash attention, Mamba2 SSD
+chunk scan, RG-LRU blocked scan.  ``ops`` holds the jit'd wrappers; ``ref``
+the pure-jnp oracles; validation sweeps live in tests/test_kernels_*.py."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,130 @@
+"""Flash attention (fwd) — Pallas TPU kernel with online softmax.
+
+TPU adaptation of the flash pattern: the KV loop is the innermost grid
+dimension (TPU grids execute sequentially, so VMEM scratch carries the
+(m, l, acc) state across kv blocks); q/k/v tiles live in VMEM via BlockSpecs;
+the MXU sees (block_q x head_dim) @ (head_dim x block_k) contractions with
+128-aligned tiles.  GQA is handled in the k/v index_map (q head h reads kv
+head h // group) — no materialized repeat.
+
+Layout: q (B, H, Sq, D), k/v (B, KV, Sk, D) -> out (B, H, Sq, D).
+Masks: causal, sliding window, and k-padding, all position-based so the same
+kernel serves train, prefill and windowed (local) attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, block_q, block_k, seq_q, seq_k, q_offset,
+            n_kv_blocks):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    ok = k_pos < seq_k
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > (q_pos - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0, q_offset=0,
+                         block_q=128, block_k=128, interpret=False):
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D); H % KV == 0."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(sk, 8))
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = q.shape[2] // block_q
+    nk = k.shape[2] // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, seq_q=sq, seq_k=sk, q_offset=q_offset,
+        n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pq:
+        out = out[:, :, :sq, :]
+    return out
+
+
+def vmem_blocks(block_q: int, block_k: int, d: int, dtype=jnp.bfloat16):
+    """Working-set descriptors for MemoryPlanner.check_vmem (paper planner)."""
+    return [((block_q, d), dtype), ((block_k, d), dtype), ((block_k, d), dtype),
+            ((block_q, d), jnp.dtype("float32")),      # acc scratch
+            ((block_q,), jnp.dtype("float32")),
+            ((block_q,), jnp.dtype("float32")),
+            ((block_q, d), dtype)]                     # out tile

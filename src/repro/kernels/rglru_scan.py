@@ -1,0 +1,65 @@
+"""RG-LRU linear recurrence — Pallas blocked-scan kernel.
+
+Grid (B, n_blocks): sequence blocks run sequentially, carrying h in VMEM
+scratch.  Within a block the recurrence h_t = a_t h_{t-1} + b_t is computed
+with an associative scan (log-depth on TPU), seeded by folding the carry into
+b_0.  Bandwidth-bound by design: one read of (a, b), one write of y per
+element — the roofline target is HBM, not MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, y_ref, h_scr, *, n_blocks):
+    bi = pl.program_id(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)        # (Q, L)
+    b = b_ref[0].astype(jnp.float32)        # (Q, L)
+    b = b.at[0, :].add(a[0, :] * h_scr[...])
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, y = jax.lax.associative_scan(combine, (a, b), axis=0)
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_scr[...] = y[-1, :]
+
+
+def rglru_scan_kernel(a, b, h0=None, *, block=256, interpret=False):
+    """a, b: (B, S, L) f32 -> y: (B, S, L) f32 (h_t sequence)."""
+    bsz, s, l = a.shape
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(b.dtype))
+    q = min(block, s)
+    pad = (-s) % q
+    if pad:
+        # pad with identity elements (a=1, b=0) so the scan is unaffected
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nb = a.shape[1] // q
+    kernel = functools.partial(_kernel, n_blocks=nb)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, nb),
+        in_specs=[
+            pl.BlockSpec((1, q, l), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, q, l), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, l), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nb * q, l), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((l,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return y[:, :s]

@@ -1,0 +1,102 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+Grid (B, n_chunks): chunks run sequentially per batch element (TPU grid
+order), carrying the (H, P, N) state in VMEM scratch.  Each chunk computes
+the intra-chunk quadratic term (decay-masked C Bᵀ scores) and the state
+recurrence, mirroring models/ssm.ssd_chunked (the XLA path / oracle).
+
+Block working set per step: x (Q,H,P) + B,C (Q,G,N) + state (H,P,N) f32 +
+y (Q,H,P) — validated against the 16 MiB VMEM budget via
+MemoryPlanner.check_vmem (the paper's planner at the VMEM level).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dta_ref, b_ref, c_ref, y_ref, hout_ref, h_scr, *,
+            n_chunks, rep):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)  (already dt-scaled)
+    dta = dta_ref[0].astype(jnp.float32)      # (Q, H)
+    bmat = b_ref[0].astype(jnp.float32)       # (Q, G, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (Q, G, N)
+    q = x.shape[0]
+
+    cum = jnp.cumsum(dta, axis=0)                                   # (Q, H)
+    bh = jnp.repeat(bmat, rep, axis=1)                              # (Q, H, N)
+    ch = jnp.repeat(cmat, rep, axis=1)
+    li = cum[:, None, :] - cum[None, :, :]                          # (Q, Q, H)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(mask[:, :, None], jnp.exp(li), 0.0)           # (Q, Q, H)
+    scores = jnp.einsum("ihn,jhn->ijh", ch, bh,
+                        preferred_element_type=jnp.float32) * l_mat
+    y_intra = jnp.einsum("ijh,jhp->ihp", scores, x,
+                         preferred_element_type=jnp.float32)
+    h_prev = h_scr[...]                                             # (H, P, N)
+    decay_in = jnp.exp(cum)                                         # (Q, H)
+    y_inter = jnp.einsum("ihn,hpn->ihp", ch * decay_in[..., None], h_prev,
+                         preferred_element_type=jnp.float32)
+    total = cum[-1, :]                                              # (H,)
+    decay_out = jnp.exp(total[None, :] - cum)                       # (Q, H)
+    h_new = jnp.exp(total)[:, None, None] * h_prev + jnp.einsum(
+        "jhn,jhp->hpn", bh * decay_out[..., None], x,
+        preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan_kernel(x, dta, b_mat, c_mat, *, chunk=128, interpret=False):
+    """x: (B,S,H,P) pre-scaled by dt; dta: (B,S,H) log-decays;
+    b_mat/c_mat: (B,S,G,N).  Returns (y (B,S,H,P) f32, h_fin (B,H,P,N) f32).
+
+    The D-skip term and dt scaling are applied by the wrapper (ops.py)."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dta = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+
+    kernel = functools.partial(_kernel, n_chunks=nc, rep=rep)
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, q, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, g, n), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, q, g, n), lambda bi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc * q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dta, b_mat, c_mat)
+    return y[:, :s], h_fin

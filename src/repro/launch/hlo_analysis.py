@@ -1,0 +1,341 @@
+"""Post-optimization HLO analysis for the roofline terms.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so scan-over-
+layers models are undercounted by the trip count.  This module re-derives the
+three roofline quantities from ``compiled.as_text()`` with loop-trip
+multipliers:
+
+  * dot FLOPs        — 2 * prod(result dims) * prod(contracting dims)
+  * HBM bytes        — per top-level op: operand bytes + result bytes.  The
+                       post-fusion HLO's op boundaries ARE the HBM round
+                       trips, so this is the natural traffic model.
+  * collective bytes — wire bytes per device per op kind (ring estimates):
+      all-gather      recv ~ result * (g-1)/g
+      reduce-scatter  send ~ result * (g-1)
+      all-reduce      ~ 2 * size * (g-1)/g
+      all-to-all      ~ size * (g-1)/g
+      collective-permute ~ size
+
+Loop trip counts come from the canonical lax.scan/fori while pattern
+(condition compares the induction var against a constant).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9a-z]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\s*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shapes_in(type_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+@dataclass
+class OpInfo:
+    name: str
+    kind: str
+    result_type: str
+    rest: str                     # operands + attributes (raw tail)
+    root: bool = False
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    is_entry: bool = False
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(name=m.group(1),
+                              is_entry=line.lstrip().startswith("ENTRY"))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, rtype, kind, rest = om.groups()
+            cur.ops.append(OpInfo(name=name, kind=kind, result_type=rtype,
+                                  rest=rest,
+                                  root=line.lstrip().startswith("ROOT ")))
+    return comps
+
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_segment(rest: str) -> str:
+    return rest.split(")")[0]
+
+
+def _operand_names(rest: str) -> list:
+    return _NAME_RE.findall(_operand_segment(rest))
+
+
+def build_symtab(comps: dict) -> dict:
+    """op name -> result type string (names are unique module-wide)."""
+    tab: dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            tab[op.name] = op.result_type
+    return tab
+
+
+def _operand_bytes(op: "OpInfo", symtab: dict) -> int:
+    seg = _operand_segment(op.rest)
+    inline = _type_bytes(seg)
+    if inline:
+        return inline
+    return sum(_type_bytes(symtab.get(n, "")) for n in _operand_names(op.rest))
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(rest)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if len(dims) > 1 else dims[0]
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return default
+
+
+def _dot_flops(op: OpInfo, symtab: dict) -> float:
+    res = _shapes_in(op.result_type)
+    if not res:
+        return 0.0
+    _, rshape = res[0]
+    out_elems = math.prod(rshape) if rshape else 1
+    # contracting sizes from the first operand's type + attr dims
+    cm = _CONTRACT_RE.search(op.rest)
+    operand_shapes = _shapes_in(_operand_segment(op.rest))
+    if not operand_shapes:
+        names = _operand_names(op.rest)
+        if names:
+            operand_shapes = _shapes_in(symtab.get(names[0], ""))
+    if cm is None or not operand_shapes:
+        return 2.0 * out_elems
+    _, lshape = operand_shapes[0]
+    k = 1
+    for d in cm.group(1).split(","):
+        if d and int(d) < len(lshape):
+            k *= lshape[int(d)]
+    return 2.0 * out_elems * k
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "bitcast-convert", "after-all", "partition-id",
+               "replica-id", "iota"}
+_SLICE_KINDS = {"dynamic-slice", "slice", "gather"}
+
+
+def _op_hbm_bytes(op: OpInfo, symtab: dict) -> float:
+    if op.kind in _SKIP_BYTES:
+        return 0.0
+    if op.kind == "dynamic-update-slice":
+        # in-place read-modify-write: traffic ~ 2x the update, not the buffer
+        names = _operand_names(op.rest)
+        upd = _type_bytes(symtab.get(names[1], "")) if len(names) > 1 else 0
+        return 2.0 * upd
+    return _type_bytes(op.result_type) + _operand_bytes(op, symtab)
+
+
+def _fusion_hbm_bytes(op: OpInfo, comps: dict, symtab: dict) -> float:
+    """Aliasing/slicing-aware traffic model for a fusion op.
+
+    * a fusion parameter consumed ONLY by slice-like ops is read at the
+      sliced size, not the full buffer (dynamic-slice of a scan carry);
+    * a parameter consumed only as the in-place target (first operand) of a
+      dynamic-update-slice is aliased: ~zero read;
+    * when the fusion's ROOT is a dynamic-update-slice, the full-size result
+      is written in place: traffic ~ 2x the update slice.
+    """
+    target = _CALLS_RE.search(op.rest)
+    names = _operand_names(op.rest)
+    sizes = [_type_bytes(symtab.get(n, "")) for n in names]
+    result = _type_bytes(op.result_type)
+    if not target or target.group(1) not in comps:
+        return result + sum(sizes)
+    comp = comps[target.group(1)]
+    params: dict[int, str] = {}
+    inner_tab: dict[str, OpInfo] = {}
+    for o in comp.ops:
+        inner_tab[o.name] = o
+        if o.kind == "parameter":
+            m = re.match(r"(\d+)\)", o.rest.strip())
+            if m:
+                params[int(m.group(1))] = o.name
+    consumers: dict[str, list] = {}
+    for o in comp.ops:
+        for i, n in enumerate(_operand_names(o.rest)):
+            consumers.setdefault(n, []).append((o, i))
+    read = 0.0
+    for idx, full in enumerate(sizes):
+        pname = params.get(idx)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(o.kind in _SLICE_KINDS for o, _ in cons):
+            eff = sum(_type_bytes(o.result_type) for o, _ in cons)
+            read += min(full, eff)
+        elif cons and all(o.kind == "dynamic-update-slice" and i == 0
+                          for o, i in cons):
+            read += 0.0                      # aliased in-place target
+        else:
+            read += full
+    root = next((o for o in comp.ops if o.root), None)
+    if root is not None and root.kind == "dynamic-update-slice":
+        upd_names = _operand_names(root.rest)
+        upd = _type_bytes(inner_tab[upd_names[1]].result_type) \
+            if len(upd_names) > 1 and upd_names[1] in inner_tab else 0
+        if upd == 0 and len(upd_names) > 1:
+            upd = _type_bytes(symtab.get(upd_names[1], ""))
+        return read + 2.0 * upd
+    return read + result
+
+
+def _coll_wire_bytes(op: OpInfo, default_group: int, symtab: dict) -> float:
+    g = _group_size(op.rest, default_group)
+    r = _type_bytes(op.result_type)
+    o = _operand_bytes(op, symtab)
+    if op.kind == "all-gather":
+        return r * (g - 1) / max(g, 1)
+    if op.kind == "all-reduce":
+        return 2.0 * r * (g - 1) / max(g, 1)
+    if op.kind == "reduce-scatter":
+        return o * (g - 1) / max(g, 1)
+    if op.kind == "all-to-all":
+        return r * (g - 1) / max(g, 1)
+    if op.kind == "collective-permute":
+        return r
+    return 0.0
+
+
+def _loop_trips(cond: Computation) -> int:
+    consts = []
+    for op in cond.ops:
+        if op.kind == "constant":
+            # op.rest is the raw tail after "constant(", e.g. "24)".
+            m = re.match(r"(\d+)\)", op.rest.strip())
+            if m:
+                consts.append(int(m.group(1)))
+        consts += [int(x) for x in _CONST_RE.findall(op.rest)]
+    return max(consts) if consts else 1
+
+
+@dataclass
+class HloSummary:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_bytes_by_kind: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+    n_while: int = 0
+    trips: dict = field(default_factory=dict)
+
+
+def analyze(hlo: str, default_group: int = 1) -> HloSummary:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    symtab = build_symtab(comps)
+    s = HloSummary()
+
+    def walk(comp: Computation, mult: float, seen: tuple):
+        if comp.name in seen:      # recursion guard
+            return
+        for op in comp.ops:
+            if op.kind == "while":
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                trips = 1
+                if cond and cond.group(1) in comps:
+                    trips = _loop_trips(comps[cond.group(1)])
+                s.n_while += 1
+                s.trips[op.name] = trips
+                if body and body.group(1) in comps:
+                    walk(comps[body.group(1)], mult * trips,
+                         seen + (comp.name,))
+                continue
+            if op.kind in ("call", "conditional"):
+                for target in _CALLS_RE.findall(op.rest):
+                    if target in comps:
+                        walk(comps[target], mult, seen + (comp.name,))
+                # fall through: count the op's own bytes too (cheap)
+            if op.kind == "fusion":
+                # fusion boundary traffic only, aliasing/slicing-aware
+                s.hbm_bytes += mult * _fusion_hbm_bytes(op, comps, symtab)
+                # dots inside fusions: count their flops
+                target = _CALLS_RE.search(op.rest)
+                if target and target.group(1) in comps:
+                    for inner in comps[target.group(1)].ops:
+                        if inner.kind in ("dot", "convolution"):
+                            s.dot_flops += mult * _dot_flops(inner, symtab)
+                continue
+            if op.kind in ("dot", "convolution"):
+                s.dot_flops += mult * _dot_flops(op, symtab)
+            if op.kind in COLLECTIVES or (op.kind.endswith("-start") and
+                                          op.kind[:-6] in COLLECTIVES):
+                kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+                wb = mult * _coll_wire_bytes(op, default_group, symtab)
+                s.coll_bytes += wb
+                s.coll_bytes_by_kind[kind] = s.coll_bytes_by_kind.get(kind, 0.0) + wb
+                s.coll_counts[kind] = s.coll_counts.get(kind, 0) + 1
+            s.hbm_bytes += mult * _op_hbm_bytes(op, symtab)
+        return
+
+    walk(entry, 1.0, ())
+    return s

@@ -1,0 +1,5 @@
+"""Model substrate: composable transformer over block patterns + paper-native
+CNN/seq2seq families for the Fig. 2/3/4 reproductions."""
+from .transformer import RunOpts, Transformer
+
+__all__ = ["RunOpts", "Transformer"]

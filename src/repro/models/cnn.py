@@ -1,0 +1,97 @@
+"""Paper-native CNN families (AlexNet / ResNet-50 / Inception-ResNet style).
+
+Used to regenerate the paper's Fig. 2/3/4 memory profiles from real jaxpr
+traces (training fwd+bwd and inference fwd).  Reduced but structurally
+faithful: sequential conv pyramid (AlexNet), bottleneck residuals (ResNet),
+parallel inception branches on residuals (Inception-ResNet).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.paper_native import CNNConfig
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def init_cnn(cfg: CNNConfig, key):
+    params = {}
+    cin = 3
+    k = key
+    for si, (blocks, ch) in enumerate(cfg.stages):
+        for bi in range(blocks):
+            k, k1, k2, k3 = jax.random.split(k, 4)
+            scale = 1.0 / math.sqrt(3 * 3 * cin)
+            if cfg.inception:
+                params[f"s{si}b{bi}_a"] = scale * jax.random.normal(k1, (1, 1, cin, ch // 4))
+                params[f"s{si}b{bi}_b"] = scale * jax.random.normal(k2, (3, 3, cin, ch // 2))
+                params[f"s{si}b{bi}_c"] = scale * jax.random.normal(k3, (5, 5, cin, ch // 4))
+            elif cfg.fc == 0:  # resnet bottleneck
+                params[f"s{si}b{bi}_1"] = scale * jax.random.normal(k1, (1, 1, cin, ch // 4))
+                params[f"s{si}b{bi}_2"] = scale * jax.random.normal(k2, (3, 3, ch // 4, ch // 4))
+                params[f"s{si}b{bi}_3"] = scale * jax.random.normal(k3, (1, 1, ch // 4, ch))
+                if cin != ch:
+                    params[f"s{si}b{bi}_p"] = scale * jax.random.normal(k, (1, 1, cin, ch))
+            else:  # alexnet-style
+                params[f"s{si}b{bi}"] = scale * jax.random.normal(k1, (3, 3, cin, ch))
+            cin = ch
+    if cfg.fc:
+        k, k1, k2 = jax.random.split(k, 3)
+        params["fc1"] = 0.01 * jax.random.normal(k1, (cin, cfg.fc))
+        params["fc2"] = 0.01 * jax.random.normal(k2, (cfg.fc, cfg.classes))
+    else:
+        k, k1 = jax.random.split(k)
+        params["fc2"] = 0.01 * jax.random.normal(k1, (cin, cfg.classes))
+    return params
+
+
+def cnn_forward(params, x, cfg: CNNConfig):
+    cin = 3
+    for si, (blocks, ch) in enumerate(cfg.stages):
+        for bi in range(blocks):
+            if cfg.inception:
+                a = jax.nn.relu(_conv(x, params[f"s{si}b{bi}_a"]))
+                b = jax.nn.relu(_conv(x, params[f"s{si}b{bi}_b"]))
+                c = jax.nn.relu(_conv(x, params[f"s{si}b{bi}_c"]))
+                y = jnp.concatenate([a, b, c], axis=-1)
+                x = y if x.shape[-1] != y.shape[-1] else jax.nn.relu(x + y)
+            elif cfg.fc == 0:
+                h = jax.nn.relu(_conv(x, params[f"s{si}b{bi}_1"]))
+                h = jax.nn.relu(_conv(h, params[f"s{si}b{bi}_2"]))
+                h = _conv(h, params[f"s{si}b{bi}_3"])
+                sc = x if f"s{si}b{bi}_p" not in params else _conv(x, params[f"s{si}b{bi}_p"])
+                x = jax.nn.relu(sc + h)
+            else:
+                x = jax.nn.relu(_conv(x, params[f"s{si}b{bi}"]))
+            cin = ch
+        x = _pool(x)
+    x = x.mean(axis=(1, 2))
+    if "fc1" in params:
+        x = jax.nn.relu(x @ params["fc1"])
+    return x @ params["fc2"]
+
+
+def cnn_loss(params, x, labels, cfg: CNNConfig):
+    logits = cnn_forward(params, x, cfg)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def train_step_fn(cfg: CNNConfig):
+    def step(params, x, labels):
+        loss, grads = jax.value_and_grad(cnn_loss)(params, x, labels, cfg)
+        new_params = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+        return loss, new_params
+    return step

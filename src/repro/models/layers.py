@@ -1,0 +1,144 @@
+"""Shared layer primitives (pure JAX, dtype-policy aware)."""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime import mesh_ctx
+
+# --------------------------------------------------------------------------
+# dtype policy: params live in fp32 (optimizer master), compute in bf16.
+# --------------------------------------------------------------------------
+
+
+def cdt(x, compute_dtype):
+    return x.astype(compute_dtype) if x.dtype != compute_dtype else x
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: int array (...,); returns (cos, sin) of shape (..., hd/2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, ..., head_dim); cos/sin: (B|1, S, hd/2) — middle dims are
+    inserted here so the same table serves q (5-D) and k (4-D)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    shape = cos.shape[:2] + (1,) * (x.ndim - 3) + cos.shape[-1:]
+    cos = cos.reshape(shape).astype(x.dtype)
+    sin = sin.reshape(shape).astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"gelu": partial(jax.nn.gelu, approximate=True),
+            "silu": jax.nn.silu, "relu": jax.nn.relu}[name]
+
+
+def mlp(x, p, act: str, compute_dtype):
+    """Dense FFN; `swiglu`/`geglu` use the gated form with w_gate."""
+    xc = cdt(x, compute_dtype)
+    if act in ("swiglu", "geglu"):
+        inner_act = jax.nn.silu if act == "swiglu" else partial(jax.nn.gelu, approximate=True)
+        g = inner_act(jnp.einsum("...d,df->...f", xc, cdt(p["w_gate"], compute_dtype)))
+        h = jnp.einsum("...d,df->...f", xc, cdt(p["w_up"], compute_dtype))
+        h = g * h
+    else:
+        h = jnp.einsum("...d,df->...f", xc, cdt(p["w_up"], compute_dtype))
+        if "b_up" in p:
+            h = h + cdt(p["b_up"], compute_dtype)
+        h = act_fn(act)(h)
+    h = mesh_ctx.shard(h, "batch", "seq", "mlp")
+    out = jnp.einsum("...f,fd->...d", h, cdt(p["w_down"], compute_dtype))
+    if "b_down" in p:
+        out = out + cdt(p["b_down"], compute_dtype)
+    return out
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def embed_lookup(table, tokens, compute_dtype):
+    return cdt(jnp.take(table, tokens, axis=0), compute_dtype)
+
+
+def unembed(x, table, compute_dtype):
+    """Logits; table is (vocab, d) (tied or untied)."""
+    return jnp.einsum("...d,vd->...v", cdt(x, compute_dtype), cdt(table, compute_dtype))
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv (mamba2 / rg-lru blocks)
+# --------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b=None):
+    """x: (B, S, C), w: (K, C) depthwise causal; returns (B, S, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # Sum over K shifted copies — cheap, fusion-friendly, and identical to a
+    # depthwise conv with left padding.
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + xp[:, k:k + S, :] * w[k].astype(x.dtype)
+    if b is not None:
+        out = out + b.astype(x.dtype)
+    return out
+
+
+def conv1d_update(state, x_t, w, b=None):
+    """Single-token conv update.  state: (B, K-1, C); x_t: (B, C)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)   # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x_t.dtype)
+    if b is not None:
+        y = y + b.astype(x_t.dtype)
+    return window[:, 1:, :], y

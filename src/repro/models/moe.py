@@ -1,0 +1,161 @@
+"""Mixture-of-Experts FFN: token-choice top-k, capacity-bounded, sort-based.
+
+Dispatch is the sort/scatter formulation (dropless-style but with a static
+capacity bound so shapes stay fixed for XLA): tokens are argsorted by expert
+id, each token gets a position-in-expert via searchsorted, tokens past the
+capacity C = ceil(T*k/E * capacity_factor) are dropped, and expert FFNs run
+as one batched einsum over the (E, C, d) dispatch buffer.  The experts axis
+is model-sharded (EP); the token->expert reshard lowers to collectives that
+the dry-run measures.
+
+Aux load-balancing loss follows Switch Transformer (f_i * P_i * E).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime import mesh_ctx
+from .layers import cdt
+
+
+def capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = math.ceil(n_tokens * top_k / n_experts * factor)
+    return max(8, ((c + 7) // 8) * 8)   # pad to 8 for TPU-friendly tiling
+
+
+def moe_mlp(x, p, cfg, compute_dtype, grouped: bool = False):
+    """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar f32).
+
+    ``grouped=True`` (beyond-paper, §Perf): hierarchical dispatch — tokens are
+    grouped per data shard and each group gets its own capacity, so the
+    (groups, E, C_g, d) dispatch buffer shards as groups->data, experts->model
+    and the token->expert reshard crosses only the model axis instead of
+    replicating a global (E*C, d) buffer.
+    """
+    if grouped:
+        g = _n_data_groups()
+        b, s, d = x.shape
+        if g > 1 and b % g == 0:
+            return _moe_mlp_grouped(x, p, cfg, compute_dtype, g)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, k, e, cfg.capacity_factor)
+
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", cdt(xf, jnp.float32),
+                        p["w_router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, k)                        # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss (computed on the full router distribution).
+    me = probs.mean(axis=0)                                       # (E,)
+    ce_frac = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce_frac)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    eids = top_i.reshape(-1)                                      # (T*k,)
+    order = jnp.argsort(eids, stable=True)
+    sorted_eids = eids[order]
+    seg_start = jnp.searchsorted(sorted_eids, jnp.arange(e))      # (E,)
+    pos_in_e = jnp.arange(t * k) - seg_start[sorted_eids]
+    keep = pos_in_e < c
+    dest = sorted_eids * c + jnp.minimum(pos_in_e, c - 1)         # (T*k,)
+    token_of = order // k
+
+    gathered = cdt(xf, compute_dtype)[token_of]                   # (T*k, d)
+    gathered = gathered * keep[:, None].astype(compute_dtype)
+    buf = jnp.zeros((e * c, d), compute_dtype).at[dest].add(gathered)
+    buf = buf.reshape(e, c, d)
+    buf = mesh_ctx.shard(buf, "experts", "capacity", "embed")
+
+    # ---- expert FFNs (batched over E) -----------------------------------------
+    w_gate = cdt(p["w_gate"], compute_dtype)
+    w_up = cdt(p["w_up"], compute_dtype)
+    w_down = cdt(p["w_down"], compute_dtype)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+    h = jnp.einsum("ecd,edf->ecf", buf, w_up) * g
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+    y = mesh_ctx.shard(y, "experts", "capacity", "embed")
+
+    # ---- combine ---------------------------------------------------------------
+    y_sorted = y.reshape(e * c, d)[dest] * keep[:, None].astype(compute_dtype)
+    w_sorted = top_p.reshape(-1)[order].astype(compute_dtype)
+    out = jnp.zeros((t, d), compute_dtype).at[token_of].add(y_sorted * w_sorted[:, None])
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (grouped) dispatch — §Perf collective-term optimization
+# ---------------------------------------------------------------------------
+
+
+def _n_data_groups() -> int:
+    mesh = mesh_ctx.current_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            g *= mesh.shape[ax]
+    return g
+
+
+def _moe_mlp_grouped(x, p, cfg, compute_dtype, n_groups: int):
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    tg = t // n_groups
+    c = capacity(tg, k, e, cfg.capacity_factor)
+
+    xg = x.reshape(n_groups, tg, d)           # batch-major: aligns with data shards
+    xg = mesh_ctx.shard(xg, "groups", None, "embed")
+
+    w_router = p["w_router"].astype(jnp.float32)
+
+    def dispatch(xf):
+        """One group's token->buffer dispatch.  xf: (Tg, d)."""
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), w_router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        me = probs.mean(axis=0)
+        ce_frac = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (tg * k)
+        aux = e * jnp.sum(me * ce_frac)
+        eids = top_i.reshape(-1)
+        order = jnp.argsort(eids, stable=True)
+        sorted_eids = eids[order]
+        seg_start = jnp.searchsorted(sorted_eids, jnp.arange(e))
+        pos_in_e = jnp.arange(tg * k) - seg_start[sorted_eids]
+        keep = pos_in_e < c
+        dest = sorted_eids * c + jnp.minimum(pos_in_e, c - 1)
+        token_of = order // k
+        gathered = xf.astype(compute_dtype)[token_of]
+        gathered = gathered * keep[:, None].astype(compute_dtype)
+        buf = jnp.zeros((e * c, d), compute_dtype).at[dest].add(gathered)
+        return buf.reshape(e, c, d), (dest, token_of, keep, top_p, order, aux)
+
+    buf, (dest, token_of, keep, top_p, order, aux) = jax.vmap(dispatch)(xg)
+    buf = mesh_ctx.shard(buf, "groups", "experts", "capacity", "embed")
+
+    w_gate = cdt(p["w_gate"], compute_dtype)
+    w_up = cdt(p["w_up"], compute_dtype)
+    w_down = cdt(p["w_down"], compute_dtype)
+    gact = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, w_gate))
+    h = jnp.einsum("gecd,edf->gecf", buf, w_up) * gact
+    y = jnp.einsum("gecf,efd->gecd", h, w_down)
+    y = mesh_ctx.shard(y, "groups", "experts", "capacity", "embed")
+
+    def combine(yg, destg, token_ofg, keepg, top_pg, orderg):
+        ys = yg.reshape(e * c, d)[destg] * keepg[:, None].astype(compute_dtype)
+        ws = top_pg.reshape(-1)[orderg].astype(compute_dtype)
+        return jnp.zeros((tg, d), compute_dtype).at[token_ofg].add(
+            ys * ws[:, None])
+
+    out = jax.vmap(combine)(y, dest, token_of, keep, top_p, order)
+    out = mesh_ctx.shard(out, "groups", None, "embed")
+    return out.reshape(b, s, d), aux.mean()

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)              # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)              # input gate
+    log a_t = -c * softplus(Lambda) * r_t     # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The full residual block is: linear -> causal conv -> RG-LRU on one branch,
+linear -> GeLU gate on the other, multiplied and projected out.  The scan is
+a first-order linear recurrence, computed with ``jax.lax.associative_scan``
+(XLA path) or the Pallas blocked-scan kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime import mesh_ctx
+from .layers import causal_conv1d, cdt, conv1d_update
+
+_C = 8.0
+
+
+def _gates(x, p):
+    """x: (..., lru); block-diagonal gates (one block per head).
+
+    Returns (log_a, gated_input) in f32."""
+    xf = x.astype(jnp.float32)
+    nb, bs, _ = p["w_a"].shape
+    xb = xf.reshape(*xf.shape[:-1], nb, bs)
+    r = jax.nn.sigmoid(jnp.einsum("...bi,bij->...bj", xb, p["w_a"].astype(jnp.float32))
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...bi,bij->...bj", xb, p["w_x"].astype(jnp.float32))
+                       + p["b_x"].astype(jnp.float32))
+    r = r.reshape(xf.shape)
+    i = i.reshape(xf.shape)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-6))
+    return log_a, beta * (i * xf)
+
+
+def rglru_scan(x, p, h0=None, use_kernel: bool = False):
+    """x: (B,S,lru) -> (y: (B,S,lru), h_final: (B,lru))."""
+    log_a, b = _gates(x, p)
+    a = jnp.exp(log_a)
+    if use_kernel:
+        from ..kernels import ops as kops
+        y = kops.rglru_scan(a, b, h0)
+    else:
+        if h0 is not None:
+            b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+        _, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return y.astype(x.dtype), y[:, -1, :]
+
+
+def rglru_step(x_t, h_prev, p):
+    """x_t: (B,lru); h_prev: (B,lru) -> (y_t, h_new)."""
+    log_a, b = _gates(x_t, p)
+    h_new = jnp.exp(log_a) * h_prev.astype(jnp.float32) + b
+    return h_new.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Full Griffin recurrent block
+# ---------------------------------------------------------------------------
+
+
+def recurrent_block(x, p, cfg, compute_dtype, *, use_kernel=False):
+    """x: (B,S,D) -> (B,S,D); training / prefill path."""
+    xc = cdt(x, compute_dtype)
+    branch = jnp.einsum("bsd,dl->bsl", xc, cdt(p["w_branch"], compute_dtype))
+    branch = causal_conv1d(branch, p["w_conv"], p.get("b_conv"))
+    branch = mesh_ctx.shard(branch, "batch", "seq", "lru")
+    y, _ = rglru_scan(branch, p["lru"], use_kernel=use_kernel)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", xc, cdt(p["w_gate"], compute_dtype)))
+    out = jnp.einsum("bsl,ld->bsd", y * gate, cdt(p["w_out"], compute_dtype))
+    return out
+
+
+def recurrent_block_prefill(x, p, cfg, compute_dtype):
+    """Like recurrent_block but also returns the decode state."""
+    k = cfg.conv_width
+    xc = cdt(x, compute_dtype)
+    branch_raw = jnp.einsum("bsd,dl->bsl", xc, cdt(p["w_branch"], compute_dtype))
+    s = x.shape[1]
+    pad = max(0, (k - 1) - s)
+    br = jnp.pad(branch_raw, ((0, 0), (pad, 0), (0, 0))) if pad else branch_raw
+    conv_state = br[:, -(k - 1):, :]
+    branch = causal_conv1d(branch_raw, p["w_conv"], p.get("b_conv"))
+    y, h_fin = rglru_scan(branch, p["lru"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", xc, cdt(p["w_gate"], compute_dtype)))
+    out = jnp.einsum("bsl,ld->bsd", y * gate, cdt(p["w_out"], compute_dtype))
+    return out, {"conv": conv_state, "h": h_fin}
+
+
+def recurrent_block_decode(x_t, state, p, cfg, compute_dtype):
+    """x_t: (B,D); state: {"conv": (B,K-1,lru), "h": (B,lru)}."""
+    xc = cdt(x_t, compute_dtype)
+    branch = jnp.einsum("bd,dl->bl", xc, cdt(p["w_branch"], compute_dtype))
+    conv_state, branch = conv1d_update(state["conv"], branch, p["w_conv"],
+                                       p.get("b_conv"))
+    y, h_new = rglru_step(branch, state["h"], p["lru"])
+    gate = jax.nn.gelu(jnp.einsum("bd,dl->bl", xc, cdt(p["w_gate"], compute_dtype)))
+    out = jnp.einsum("bl,ld->bd", y * gate, cdt(p["w_out"], compute_dtype))
+    return out, {"conv": conv_state, "h": h_new.astype(state["h"].dtype)}

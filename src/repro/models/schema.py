@@ -1,0 +1,115 @@
+"""Param-schema system: one declaration drives init, abstract eval and sharding.
+
+A ``Schema`` is a nested dict whose leaves are ``P`` descriptors (shape +
+logical axis names + init rule).  From it we derive:
+  * real parameters       (``init_params``)        — smoke tests, examples
+  * ShapeDtypeStructs     (``abstract_params``)    — dry-run lowering
+  * PartitionSpecs        (``logical_specs``)      — pjit in/out shardings
+  * parameter counts      (``count_params``)       — roofline MODEL_FLOPS
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: tuple                       # logical axis names (str | None) per dim
+    init: str = "normal"              # normal | zeros | ones
+    scale: Optional[float] = None     # stddev; None -> 1/sqrt(fan_in)
+    dtype: Optional[str] = None       # override model default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict  # nested str -> P | Schema
+
+
+def stack(n: int, schema: Schema, axis: str = "layers") -> Schema:
+    """Prepend a stacking dim of size n (for scan-over-layers params)."""
+    out: Schema = {}
+    for k, v in schema.items():
+        if isinstance(v, P):
+            out[k] = P(shape=(n,) + tuple(v.shape), axes=(axis,) + tuple(v.axes),
+                       init=v.init, scale=v.scale, dtype=v.dtype)
+        else:
+            out[k] = stack(n, v, axis)
+    return out
+
+
+def _leaves(schema: Schema, prefix=()):
+    for k, v in schema.items():
+        if isinstance(v, P):
+            yield prefix + (k,), v
+        else:
+            yield from _leaves(v, prefix + (k,))
+
+
+def map_schema(schema: Schema, fn: Callable[[tuple, P], Any]):
+    out = {}
+    for k, v in schema.items():
+        if isinstance(v, P):
+            out[k] = fn((k,), v)
+        else:
+            out[k] = {kk: vv for kk, vv in map_schema(v, fn).items()}
+    return out
+
+
+def _fan_in(p: P) -> int:
+    # Last-but-one dim is the canonical fan-in for 2D+; fall back to last.
+    if len(p.shape) >= 2:
+        return int(p.shape[-2])
+    return int(p.shape[-1]) if p.shape else 1
+
+
+def init_params(schema: Schema, key: jax.Array, dtype: str = "float32"):
+    leaves = list(_leaves(schema))
+    keys = jax.random.split(key, max(1, len(leaves)))
+    key_by_path = {path: k for (path, _), k in zip(leaves, keys)}
+
+    def make(path, p: P):
+        dt = jnp.dtype(p.dtype or dtype)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        scale = p.scale if p.scale is not None else 1.0 / math.sqrt(max(1, _fan_in(p)))
+        return (scale * jax.random.normal(key_by_path[path], p.shape)).astype(dt)
+
+    def rec(s: Schema, prefix=()):
+        out = {}
+        for k, v in s.items():
+            if isinstance(v, P):
+                out[k] = make(prefix + (k,), v)
+            else:
+                out[k] = rec(v, prefix + (k,))
+        return out
+
+    return rec(schema)
+
+
+def abstract_params(schema: Schema, dtype: str = "float32"):
+    return map_schema(
+        schema, lambda _, p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype or dtype)))
+
+
+def logical_axes(schema: Schema):
+    """Pytree of logical-axis tuples mirroring the params pytree."""
+    return map_schema(schema, lambda _, p: tuple(p.axes))
+
+
+def count_params(schema: Schema) -> int:
+    return sum(int(np.prod(p.shape)) for _, p in _leaves(schema))
+
+
+def bytes_params(schema: Schema, dtype: str = "float32") -> int:
+    return sum(int(np.prod(p.shape)) * np.dtype(p.dtype or dtype).itemsize
+               for _, p in _leaves(schema))

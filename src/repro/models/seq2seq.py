@@ -1,0 +1,102 @@
+"""Paper-native seq2seq (Sutskever et al. 2014): LSTM encoder-decoder.
+
+The paper's §5.3 workload: variable-length inputs make the propagation
+non-hot across mini-batches, which exercises the reoptimization path.  Used
+for Fig. 2c/3c/4b reproductions (profiles re-traced per length bucket).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.paper_native import Seq2SeqConfig
+
+
+def _lstm_params(key, d_in, d_h):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(d_in + d_h)
+    return {"wx": s * jax.random.normal(k1, (d_in, 4 * d_h)),
+            "wh": s * jax.random.normal(k2, (d_h, 4 * d_h)),
+            "b": jnp.zeros((4 * d_h,))}
+
+
+def init_seq2seq(cfg: Seq2SeqConfig, key):
+    keys = jax.random.split(key, 2 * cfg.layers + 3)
+    d = cfg.d_model
+    return {
+        "embed_src": 0.02 * jax.random.normal(keys[0], (cfg.vocab, d)),
+        "embed_tgt": 0.02 * jax.random.normal(keys[1], (cfg.vocab, d)),
+        "enc": [_lstm_params(keys[2 + i], d, d) for i in range(cfg.layers)],
+        "dec": [_lstm_params(keys[2 + cfg.layers + i], d, d) for i in range(cfg.layers)],
+        "out": 0.02 * jax.random.normal(keys[-1], (d, cfg.vocab)),
+    }
+
+
+def _lstm_cell(p, x, state):
+    h, c = state
+    z = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, (h, c)
+
+
+def _run_lstm(p, xs, state):
+    """xs: (S, B, D) — python loop so each timestep shows up in the profile
+    (mirrors Chainer's define-by-run allocation stream)."""
+    hs = []
+    for t in range(xs.shape[0]):
+        h, state = _lstm_cell(p, xs[t], state)
+        hs.append(h)
+    return jnp.stack(hs), state
+
+
+def seq2seq_loss(params, src, tgt, cfg: Seq2SeqConfig):
+    """src: (B, S_in) int32; tgt: (B, S_out) int32."""
+    b = src.shape[0]
+    d = cfg.d_model
+    x = jnp.take(params["embed_src"], src.T, axis=0)       # (S_in, B, D)
+    states = []
+    for layer in params["enc"]:
+        x, st = _run_lstm(layer, x, (jnp.zeros((b, d)), jnp.zeros((b, d))))
+        states.append(st)
+    y = jnp.take(params["embed_tgt"], tgt.T, axis=0)
+    for layer, st in zip(params["dec"], states):
+        y, _ = _run_lstm(layer, y, st)
+    logits = y @ params["out"]                              # (S_out, B, V)
+    logp = jax.nn.log_softmax(logits[:-1])
+    gold = jnp.take_along_axis(logp, tgt.T[1:][..., None], axis=-1)
+    return -gold.mean()
+
+
+def train_step_fn(cfg: Seq2SeqConfig):
+    def step(params, src, tgt):
+        loss, grads = jax.value_and_grad(seq2seq_loss)(params, src, tgt, cfg)
+        new = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+        return loss, new
+    return step
+
+
+def infer_fn(cfg: Seq2SeqConfig):
+    """Greedy generation of cfg.infer_len tokens (the paper's 100 words)."""
+    def infer(params, src):
+        b = src.shape[0]
+        d = cfg.d_model
+        x = jnp.take(params["embed_src"], src.T, axis=0)
+        states = []
+        for layer in params["enc"]:
+            x, st = _run_lstm(layer, x, (jnp.zeros((b, d)), jnp.zeros((b, d))))
+            states.append(st)
+        tok = jnp.zeros((b,), jnp.int32)
+        outs = []
+        for _ in range(cfg.infer_len):
+            y = jnp.take(params["embed_tgt"], tok, axis=0)
+            new_states = []
+            for layer, st in zip(params["dec"], states):
+                y, st2 = _lstm_cell(layer, y, st)
+                new_states.append(st2)
+            states = new_states
+            tok = jnp.argmax(y @ params["out"], axis=-1).astype(jnp.int32)
+            outs.append(tok)
+        return jnp.stack(outs, axis=1)
+    return infer

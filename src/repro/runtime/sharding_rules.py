@@ -1,0 +1,130 @@
+"""Logical-axis -> mesh-axis resolution for params, activations and caches.
+
+Layout (DESIGN.md §5): FSDP shards the d_model ("embed") dim of every weight
+over ``data``; TP shards heads / mlp / vocab / experts / lru over ``model``;
+``pod`` is pure DP (params replicated across pods, batch sharded over
+pod x data).  All rules are divisibility-guarded: a dim that does not divide
+evenly is left unsharded (JAX rejects uneven input shardings), which is why
+e.g. phi4's 24 heads stay replicated over the 16-way model axis — a
+documented baseline inefficiency the §Perf hillclimb attacks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.schema import Schema, logical_axes, map_schema
+from . import mesh_ctx
+
+PARAM_RULES: dict[str, tuple] = {
+    "embed": ("data",),          # FSDP
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "lru": ("model",),
+    "layers": (),
+}
+
+# Activation rules live in mesh_ctx.ACTIVATION_RULES (batch over pod+data,
+# heads/mlp/vocab/experts over model); cache rules below.
+CACHE_RULES: dict[str, tuple] = {
+    "batch": ("data",),
+    "cache": (),                 # the cache length axis (hillclimb: -> model)
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "frames": (),
+    "lru": ("model",),
+    "inner": (),
+    "state": (),
+    "conv": (),
+    "layers": (),
+    "ssm_heads": (),
+}
+
+
+def spec_from_axes(axes: tuple, dims: tuple, mesh: Mesh,
+                   rules: dict) -> PartitionSpec:
+    used: set = set()
+    parts = []
+    for ax, d in zip(axes, dims):
+        r = mesh_ctx._resolve(rules, ax, mesh, d)
+        # a mesh axis may appear only once per spec
+        if r is None:
+            parts.append(None)
+            continue
+        rt = r if isinstance(r, tuple) else (r,)
+        rt = tuple(a for a in rt if a not in used)
+        used.update(rt)
+        parts.append(rt if len(rt) > 1 else (rt[0] if rt else None))
+    return PartitionSpec(*parts)
+
+
+def param_specs(schema: Schema, mesh: Mesh):
+    """Pytree of NamedShardings for the params (and optimizer moments)."""
+    def make(_, p):
+        spec = spec_from_axes(tuple(p.axes), tuple(p.shape), mesh, PARAM_RULES)
+        return NamedSharding(mesh, spec)
+    return map_schema(schema, make)
+
+
+def batch_specs(batch_shapes: dict, mesh: Mesh):
+    """Shardings for a training/prefill batch dict."""
+    out = {}
+    for k, sds in batch_shapes.items():
+        if k == "frames":
+            axes = ("batch", "frames", "embed")
+        elif k in ("tokens", "mask"):
+            axes = ("batch", "seq")
+        else:
+            axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        spec = spec_from_axes(axes, tuple(sds.shape), mesh,
+                              mesh_ctx.ACTIVATION_RULES)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def _cache_leaf_axes(path: tuple, shape: tuple) -> tuple:
+    """Logical axes for one cache leaf, keyed by its dict path/rank."""
+    name = path[-1]
+    stacked = ("pattern" in path)
+    lead = ("layers",) if stacked else ()
+    body = shape[len(lead):]
+    if name in ("k", "v", "xk", "xv"):
+        axes = ("batch", "cache", "kv_heads", "head_dim")
+    elif name == "conv":
+        axes = ("batch", "conv", "inner")
+    elif name == "h":
+        axes = ("batch", "lru")
+    elif name == "ssm":
+        axes = ("batch", "ssm_heads", "head_dim", "state")
+    elif name == "pos":
+        axes = ()
+    else:
+        axes = (None,) * len(body)
+    assert len(axes) == len(body), (path, shape, axes)
+    return lead + axes
+
+
+def cache_specs(cache_sds, mesh: Mesh, rules: Optional[dict] = None):
+    """Shardings for the decode cache pytree (built from cache_spec())."""
+    rules = dict(CACHE_RULES, **(rules or {}))
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(cache_sds)[0]
+    treedef = jax.tree_util.tree_structure(cache_sds)
+    shardings = []
+    for kp, leaf in paths_and_leaves:
+        path = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in kp)
+        axes = _cache_leaf_axes(path, tuple(leaf.shape))
+        spec = spec_from_axes(axes, tuple(leaf.shape), mesh, rules)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PartitionSpec())

@@ -1,0 +1,153 @@
+"""Training step builder: pjit + FSDP/TP shardings + microbatching + remat.
+
+``build_train_step`` returns a jitted step with donated state, explicit
+in/out shardings resolved from the param schema, optional gradient
+accumulation (lax.scan over microbatches) and optional int8 error-feedback
+gradient compression for the cross-pod reduce.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.transformer import Transformer
+from ..optim import adamw, grad_compress
+from . import mesh_ctx, sharding_rules
+
+
+@dataclass(frozen=True)
+class TrainOpts:
+    microbatches: int = 1
+    remat: bool = True
+    compress_grads: bool = False
+    donate: bool = True
+
+
+def init_state(model: Transformer, key, adamw_cfg: adamw.AdamWConfig,
+               opts: TrainOpts = TrainOpts()):
+    params = model.init(key)
+    state = {"params": params, "opt": adamw.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if opts.compress_grads:
+        state["err"] = grad_compress.init_error(params)
+    return state
+
+
+def abstract_state(model: Transformer, adamw_cfg: adamw.AdamWConfig,
+                   opts: TrainOpts = TrainOpts()):
+    """ShapeDtypeStruct state for lowering without allocation (dry-run)."""
+    params = model.abstract()
+    zeros_like = lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype)
+    state = {
+        "params": params,
+        "opt": {"m": jax.tree.map(zeros_like, params),
+                "v": jax.tree.map(zeros_like, params),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if opts.compress_grads:
+        state["err"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+    return state
+
+
+def state_shardings(model: Transformer, mesh: Mesh,
+                    opts: TrainOpts = TrainOpts()):
+    pspecs = sharding_rules.param_specs(model.schema(), mesh)
+    repl = sharding_rules.replicated(mesh)
+    state = {"params": pspecs,
+             "opt": {"m": pspecs, "v": pspecs, "count": repl},
+             "step": repl}
+    if opts.compress_grads:
+        state["err"] = pspecs
+    return state
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible into {n} microbatches"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return {k: split(v) for k, v in batch.items()}
+
+
+def build_train_step(model: Transformer, mesh: Optional[Mesh],
+                     adamw_cfg: adamw.AdamWConfig,
+                     opts: TrainOpts = TrainOpts(),
+                     batch_sds: Optional[dict] = None):
+    """Returns (jitted step, (state_shardings, batch_shardings_fn)).
+
+    With a mesh + ``batch_sds`` (ShapeDtypeStructs of the batch), the jit is
+    built with explicit in/out shardings — this is the dry-run entry point.
+    """
+
+    def step_fn(state, batch):
+        ctx = (mesh_ctx.use_mesh(mesh, rules=model.opts.mesh_rules())
+               if mesh is not None else _null_ctx())
+        with ctx:
+            def loss_fn(params, mb):
+                loss, metrics = model.loss_fn(params, mb, remat=opts.remat)
+                return loss, metrics
+
+            params = state["params"]
+            if opts.microbatches > 1:
+                mbs = _split_microbatches(batch, opts.microbatches)
+
+                def acc_body(carry, mb):
+                    gsum, lsum = carry
+                    (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                    gsum = jax.tree.map(jnp.add, gsum, g)
+                    return (gsum, lsum + loss), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, jnp.zeros(())), mbs)
+                grads = jax.tree.map(lambda g: g / opts.microbatches, gsum)
+                loss = lsum / opts.microbatches
+                metrics = {}
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+
+            new_state = dict(state)
+            if opts.compress_grads:
+                grads, new_err = grad_compress.compress_decompress(
+                    grads, state["err"])
+                new_state["err"] = new_err
+            new_params, new_opt, om = adamw.update(grads, state["opt"], params,
+                                                   adamw_cfg)
+            new_state.update(params=new_params, opt=new_opt,
+                             step=state["step"] + 1)
+            out_metrics = {"loss": loss, **{k: v for k, v in metrics.items()},
+                           **om}
+            return new_state, out_metrics
+
+    donate = (0,) if opts.donate else ()
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=donate), None
+
+    st_sh = state_shardings(model, mesh, opts)
+    repl = sharding_rules.replicated(mesh)
+
+    def batch_shardings(batch_sds: dict):
+        return sharding_rules.batch_specs(batch_sds, mesh)
+
+    jitted = jax.jit(
+        step_fn,
+        donate_argnums=donate,
+        in_shardings=(st_sh, batch_shardings(batch_sds)) if batch_sds else None,
+        # pytree-prefix: all metrics replicated
+        out_shardings=(st_sh, repl),
+    )
+    return jitted, (st_sh, batch_shardings)
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

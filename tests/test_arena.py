@@ -1,0 +1,117 @@
+"""Arena allocator (§4.2) + recorder (§4.1) + reoptimization (§4.3)."""
+import pytest
+
+from repro.core import ArenaAllocator, MemoryRecorder, best_fit
+
+
+def _record_simple():
+    rec = MemoryRecorder()
+    a = rec.on_alloc(1000)
+    b = rec.on_alloc(2000)
+    rec.on_free(a)
+    c = rec.on_alloc(3000)
+    rec.on_free(b)
+    rec.on_free(c)
+    return rec.finish()
+
+
+def test_recorder_clock_and_ids():
+    prof = _record_simple()
+    assert prof.n == 3
+    ids = [b.bid for b in prof.blocks]
+    assert ids == [1, 2, 3]                      # lambda order
+    for b in prof.blocks:
+        assert b.end > b.start
+
+
+def test_arena_serves_planned_offsets():
+    prof = _record_simple()
+    ar = ArenaAllocator(prof, base=10_000)
+    ar.reset_iteration()
+    a1 = ar.alloc(1000)
+    a2 = ar.alloc(2000)
+    a3 = ar.alloc(3000)
+    # addresses are base + planned offsets, O(1), no search
+    plan = best_fit(prof)
+    assert a1 == 10_000 + plan.offsets[1]
+    assert a2 == 10_000 + plan.offsets[2]
+    assert a3 == 10_000 + plan.offsets[3]
+    assert ar.n_reopt == 0
+
+
+def test_arena_iteration_reset_is_idempotent():
+    prof = _record_simple()
+    ar = ArenaAllocator(prof)
+    for _ in range(3):
+        ar.reset_iteration()
+        addrs = [ar.alloc(1000), ar.alloc(2000), ar.alloc(3000)]
+        assert len(set(addrs)) >= 2
+    assert ar.n_reopt == 0
+
+
+def test_reoptimization_on_larger_request():
+    prof = _record_simple()
+    ar = ArenaAllocator(prof)
+    old_peak = ar.peak
+    ar.reset_iteration()
+    ar.alloc(1000)
+    ar.alloc(6000)          # profiled 2000 -> triggers §4.3 replan
+    assert ar.n_reopt == 1
+    assert ar.peak >= old_peak
+    # smaller-than-profiled requests never reoptimize
+    ar.reset_iteration()
+    ar.alloc(500)
+    assert ar.n_reopt == 1
+
+
+def test_reoptimization_on_novel_block():
+    prof = _record_simple()
+    ar = ArenaAllocator(prof)
+    ar.reset_iteration()
+    a1 = ar.alloc(1000)
+    ar.alloc(2000)
+    ar.alloc(3000)
+    a4 = ar.alloc(4000)          # block id 4 never profiled
+    # novel block served from the overflow region, above the arena
+    assert a4 >= ar.base + ar.peak
+    assert ar.n_reopt == 0
+    ar.free(a1)
+    ar.free(a4)
+    # deferred replan at iteration boundary merges the observed stream
+    ar.reset_iteration()
+    assert ar.n_reopt == 1
+    assert 4 in ar.plan.offsets
+    # the new plan serves all four blocks from the arena
+    addrs = [ar.alloc(1000), ar.alloc(2000), ar.alloc(3000), ar.alloc(4000)]
+    assert all(a < ar.base + ar.peak for a in addrs)
+    assert ar.n_reopt == 1
+
+
+def test_interrupt_resume_routes_to_fallback():
+    prof = _record_simple()
+    ar = ArenaAllocator(prof)
+    ar.reset_iteration()
+    a1 = ar.alloc(1000)
+    with ar.non_hot():
+        nh = ar.alloc(12345)       # non-hot: must not consume lambda
+        assert nh >= ar.base + ar.peak  # fallback lives above the arena
+    a2 = ar.alloc(2000)            # still block id 2
+    plan = ar.plan
+    assert a2 == ar.base + plan.offsets[2]
+    assert ar.n_fallback >= 1
+
+
+def test_recorder_interrupt_skips_events():
+    rec = MemoryRecorder()
+    rec.on_alloc(100)
+    with rec.non_hot():
+        assert rec.on_alloc(999) == -1
+    prof = rec.finish()
+    assert prof.n == 1
+    assert prof.meta["skipped"] >= 1
+
+
+def test_resume_without_interrupt_raises():
+    rec = MemoryRecorder()
+    with pytest.raises(RuntimeError):
+        rec.resume()

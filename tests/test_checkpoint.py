@@ -1,0 +1,63 @@
+"""Checkpointer: roundtrip, atomicity, async, GC."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, config_hash
+
+
+@pytest.fixture
+def tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.zeros((4,))},
+            "opt": {"m": {"w": jnp.ones((3, 4)), "b": jnp.ones((4,))},
+                    "count": jnp.asarray(7, jnp.int32)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path, tree):
+    import jax
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, tree, meta={"cfg": "x"}, blocking=True)
+    assert ck.latest_step() == 7
+    restored = ck.restore(7, like=tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ck.meta(7) == {"cfg": "x"}
+
+
+def test_async_save_then_wait(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree)           # non-blocking
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_gc_keeps_last_k(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree, blocking=True)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_no_partial_checkpoint_visible(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    # a stray tmp dir (simulated crash mid-save) is not listed
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_step_9_123"))
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009"))  # no manifest
+    assert ck.latest_step() is None
+
+
+def test_structure_mismatch_rejected(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree, blocking=True)
+    bad = {"params": {"w": jnp.zeros((3, 4))}}
+    with pytest.raises(AssertionError):
+        ck.restore(1, like=bad)
+
+
+def test_config_hash_stable():
+    assert config_hash({"a": 1}) == config_hash({"a": 1})
+    assert config_hash({"a": 1}) != config_hash({"a": 2})

@@ -1,0 +1,74 @@
+"""Config system: registry, smoke reduction, padding, pattern factorization."""
+import pytest
+
+from repro.configs import ARCHS, PAPER_ARCHS, SHAPES, get_config, list_configs
+from repro.models import Transformer
+from repro.models.schema import count_params
+
+
+def test_registry_contains_all_assigned_and_paper():
+    names = list_configs()
+    for a in ARCHS:
+        assert a in names
+    for a in PAPER_ARCHS:
+        assert a in names
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("llama-does-not-exist")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_padded_vocab_divisible_by_tp(arch):
+    cfg = get_config(arch)
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab % 16 == 0            # 16-way TP
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_block_pattern_factorizes(arch):
+    cfg = get_config(arch)
+    n = cfg.n_pattern_groups
+    assert n * len(cfg.block_pattern) + len(cfg.tail_pattern) == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_is_small_and_same_family(arch):
+    cfg = get_config(arch)
+    sm = cfg.smoke()
+    assert sm.family == cfg.family
+    assert sm.block_pattern == cfg.block_pattern
+    assert sm.n_layers <= 8
+    n = count_params(Transformer(sm).schema())
+    assert n < 2_000_000, f"{arch} smoke has {n} params"
+
+
+def test_full_param_counts_near_public_figures():
+    """Schema-derived totals must land near the models' public sizes —
+    this is the guard that caught the missing Griffin-block MLPs and the
+    untied phi4/mamba2/whisper embeddings."""
+    expected = {
+        "phi4-mini-3.8b": (3.6e9, 4.1e9),
+        "qwen2-0.5b": (0.45e9, 0.55e9),
+        "mistral-nemo-12b": (11.5e9, 13e9),
+        "starcoder2-15b": (15e9, 17e9),
+        "chameleon-34b": (33e9, 36e9),
+        "granite-moe-1b-a400m": (1.2e9, 1.5e9),
+        "qwen3-moe-30b-a3b": (29e9, 32e9),
+        "whisper-small": (0.22e9, 0.26e9),
+        "recurrentgemma-9b": (8.5e9, 10.5e9),
+        "mamba2-130m": (0.12e9, 0.15e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = count_params(Transformer(get_config(arch)).schema())
+        assert lo <= n <= hi, f"{arch}: {n / 1e9:.3f}B not in [{lo / 1e9}, {hi / 1e9}]"
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,64 @@
+"""Prefill + decode_step must reproduce the full-forward logits for every
+architecture (the serving path's correctness contract)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import Transformer
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch, rng_key):
+    cfg = get_config(arch).smoke()
+    if cfg.n_experts:
+        # capacity-based MoE drops differ with batch size; use no-drop capacity
+        cfg = cfg.with_overrides(capacity_factor=float(cfg.n_experts))
+    model = Transformer(cfg)
+    params = model.init(rng_key)
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    frames = (jnp.ones((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+              if cfg.is_encoder_decoder else None)
+    ref = model.forward(params, tokens, frames=frames)
+
+    batch = {"tokens": tokens[:, :s - 3]}
+    if frames is not None:
+        batch["frames"] = frames
+    logits, cache = model.prefill(params, batch, max_len=s)
+    errs = [float(jnp.abs(logits - ref[:, s - 4, :]).max())]
+    for t in range(s - 3, s):
+        logits, cache = model.decode_step(params, cache, tokens[:, t])
+        errs.append(float(jnp.abs(logits - ref[:, t, :]).max()))
+    assert max(errs) < 2e-3, errs
+    assert int(cache["pos"]) == s
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-9b"])
+def test_rolling_window_cache_beyond_window(arch, rng_key):
+    """Decode far past the local window: rolling cache must stay consistent."""
+    cfg = get_config(arch).smoke()     # window = 8
+    model = Transformer(cfg)
+    params = model.init(rng_key)
+    b, s = 1, 24                        # 3x the window
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+    ref = model.forward(params, tokens)
+    logits, cache = model.prefill(params, {"tokens": tokens[:, :4]}, max_len=s)
+    errs = []
+    for t in range(4, s):
+        logits, cache = model.decode_step(params, cache, tokens[:, t])
+        errs.append(float(jnp.abs(logits - ref[:, t, :]).max()))
+    assert max(errs) < 2e-3, errs
+
+
+def test_cache_spec_matches_init_cache(rng_key):
+    for arch in ("qwen2-0.5b", "mamba2-130m", "whisper-small"):
+        cfg = get_config(arch).smoke()
+        model = Transformer(cfg)
+        spec = model.cache_spec(2, 16)
+        real = model.init_cache(2, 16)
+        flat_s = jax.tree.leaves(spec)
+        flat_r = jax.tree.leaves(real)
+        assert len(flat_s) == len(flat_r)
+        for s_, r_ in zip(flat_s, flat_r):
+            assert s_.shape == r_.shape and s_.dtype == r_.dtype

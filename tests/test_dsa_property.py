@@ -1,0 +1,69 @@
+"""Hypothesis property tests: system invariants of the DSA solvers."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import best_fit, make_profile, solve_exact, validate_plan
+from repro.core.pool import NaiveAllocator, PoolAllocator, replay
+
+block_strategy = st.tuples(
+    st.integers(min_value=0, max_value=1 << 16),        # size
+    st.integers(min_value=0, max_value=40),             # start
+    st.integers(min_value=1, max_value=20),             # duration
+).map(lambda t: (t[0], t[1], t[1] + t[2]))
+
+profiles = st.lists(block_strategy, min_size=1, max_size=40).map(make_profile)
+small_profiles = st.lists(block_strategy, min_size=1, max_size=7).map(make_profile)
+
+
+@given(profiles)
+@settings(max_examples=200, deadline=None)
+def test_bestfit_is_valid_and_bounded(prof):
+    plan = best_fit(prof)
+    validate_plan(prof, plan)                       # constraints (2)-(6)
+    lb = prof.liveness_lower_bound()
+    assert plan.peak >= lb                          # cannot beat liveness
+    assert plan.peak <= prof.total_bytes            # cannot exceed no-reuse
+
+
+@given(small_profiles)
+@settings(max_examples=60, deadline=None)
+def test_exact_dominates_heuristic(prof):
+    bf = best_fit(prof)
+    ex = solve_exact(prof, node_limit=50_000, time_limit_s=10)
+    validate_plan(prof, ex)
+    assert ex.peak <= bf.peak
+    assert ex.peak >= prof.liveness_lower_bound()
+
+
+@given(profiles)
+@settings(max_examples=100, deadline=None)
+def test_dsa_beats_or_matches_pool_and_naive(prof):
+    """The paper's core claim, as an invariant: planned peak <= pool <= naive
+    total (pool can reuse only freed blocks; DSA plans globally)."""
+    plan = best_fit(prof)
+    pool = replay(prof, PoolAllocator())
+    naive = replay(prof, NaiveAllocator())
+    assert plan.peak <= pool["peak"] * 1.000001 + 512
+    assert pool["peak"] <= naive["peak"] + 512
+    assert naive["peak"] == prof.total_bytes
+
+
+@given(profiles)
+@settings(max_examples=100, deadline=None)
+def test_offsets_are_aligned(prof):
+    plan = best_fit(prof)
+    for b in prof.blocks:
+        if b.size:
+            assert plan.offsets[b.bid] >= 0
+
+
+@given(st.lists(block_strategy, min_size=2, max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_colliding_pairs_symmetric_consistent(items):
+    prof = make_profile(items)
+    pairs = set(prof.colliding_pairs())
+    bs = prof.blocks
+    for i in range(len(bs)):
+        for j in range(i + 1, len(bs)):
+            expect = bs[i].overlaps(bs[j])
+            assert ((i, j) in pairs) == expect

@@ -1,0 +1,82 @@
+"""HLO analyzer: loop-trip-corrected flops/bytes/collectives on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_simple_matmul():
+    m, k, n = 128, 256, 64
+    c = _compile(lambda a, b: a @ b,
+                 jnp.ones((m, k)), jnp.ones((k, n)))
+    s = H.analyze(c.as_text())
+    assert s.dot_flops == pytest.approx(2 * m * k * n, rel=0.01)
+
+
+def test_scan_trip_multiplier():
+    m = 64
+    w = jnp.ones((m, m))
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=13)
+        return y
+
+    c = _compile(f, jnp.ones((m, m)))
+    s = H.analyze(c.as_text())
+    assert s.n_while >= 1
+    assert 13 in s.trips.values()
+    assert s.dot_flops == pytest.approx(13 * 2 * m ** 3, rel=0.01)
+
+
+def test_nested_scan_trips_multiply():
+    m = 16
+    w = jnp.ones((m, m))
+
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    c = _compile(f, jnp.ones((m, m)))
+    s = H.analyze(c.as_text())
+    assert s.dot_flops == pytest.approx(15 * 2 * m ** 3, rel=0.01)
+
+
+def test_hbm_bytes_at_least_io():
+    m = 512
+    c = _compile(lambda a: (a * 2.0 + 1.0), jnp.ones((m, m)))
+    s = H.analyze(c.as_text())
+    assert s.hbm_bytes >= 2 * m * m * 4 * 0.9      # read + write
+
+
+def test_type_bytes_parser():
+    assert H._type_bytes("bf16[16,4096,896]{2,1,0}") == 16 * 4096 * 896 * 2
+    assert H._type_bytes("(f32[2]{0}, s32[3]{0})") == 8 + 12
+    assert H._type_bytes("pred[]") == 1
+    assert H._type_bytes("token[]") == 0
+
+
+def test_collective_wire_estimates():
+    hlo = """
+HloModule m
+
+ENTRY %main (p: f32[64]) -> f32[1024] {
+  %p = f32[64]{0} parameter(0)
+  ROOT %ag = f32[1024]{0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={0}
+}
+"""
+    s = H.analyze(hlo)
+    assert s.coll_counts == {"all-gather": 1}
+    assert s.coll_bytes == pytest.approx(1024 * 4 * 15 / 16)

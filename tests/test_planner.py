@@ -1,0 +1,59 @@
+"""MemoryPlanner services: reports, VMEM budget, max-batch search, MIP export."""
+import numpy as np
+import pytest
+
+from repro.core import MemoryPlanner, make_profile, to_lp
+from repro.core.mip import num_variables
+from repro.core.planner import HBM_BYTES, VMEM_BYTES
+
+
+def test_report_contains_baseline_comparison():
+    prof = make_profile([(4096, 0, 4), (2048, 1, 3), (4096, 4, 8)])
+    rep = MemoryPlanner().report(prof)
+    assert rep.plan.peak <= rep.baselines["pool_peak"] + 512
+    assert rep.baselines["naive_peak"] == prof.total_bytes
+    assert rep.quality["lower_bound"] <= rep.plan.peak
+
+
+def test_exact_solver_selectable():
+    prof = make_profile([(512, 0, 3), (512, 1, 4), (1024, 2, 6)])
+    rep = MemoryPlanner(solver="exact").report(prof)
+    assert rep.plan.solver == "exact"
+
+
+def test_unknown_solver_rejected():
+    with pytest.raises(ValueError):
+        MemoryPlanner(solver="magic")
+
+
+def test_vmem_check():
+    ok = MemoryPlanner.check_vmem([((128, 128), np.dtype("float32"))])
+    assert ok["fits"]
+    bad = MemoryPlanner.check_vmem([((4096, 4096), np.dtype("float32"))])
+    assert not bad["fits"]
+    assert bad["bytes"] == 2 * 4096 * 4096 * 4      # double-buffered
+
+
+def test_max_feasible_batch_monotone():
+    per_sample = 64 << 20           # 64 MB per sample
+    fixed = 4 << 30                 # 4 GB of weights
+
+    def bytes_at(b):
+        return fixed + b * per_sample
+
+    mp = MemoryPlanner()
+    b = mp.max_feasible_batch(bytes_at, hbm_budget=HBM_BYTES)
+    assert bytes_at(b) <= HBM_BYTES < bytes_at(b + 1)
+    assert mp.max_feasible_batch(lambda b: HBM_BYTES * 2, HBM_BYTES) == 0
+
+
+def test_lp_export_structure():
+    prof = make_profile([(512, 0, 3), (1024, 1, 4), (512, 5, 7)])
+    lp = to_lp(prof, max_memory=1 << 20)
+    assert lp.startswith("\\ DSA MIP")
+    assert "Minimize" in lp and "Subject To" in lp and "Binaries" in lp
+    nv = num_variables(prof)
+    assert nv["x"] == 3 and nv["z"] == 1            # one colliding pair
+    # every colliding pair yields two no-overlap rows
+    assert lp.count("no_ov_a") == nv["z"]
+    assert lp.count("no_ov_b") == nv["z"]

@@ -1,0 +1,66 @@
+"""Chainer/CuPy-style pool + naive baselines (paper §2, §5.1)."""
+from repro.core import MemoryProfile, NaiveAllocator, PoolAllocator, make_profile, replay
+from repro.core.events import Block
+
+
+def test_pool_reuses_freed_block():
+    p = PoolAllocator()
+    p.malloc(1, 1000)
+    p.free(1)
+    off = p.malloc(2, 1000)
+    assert off == 0                  # reused, not grown
+    assert p.peak == 1024
+
+
+def test_pool_best_fit_picks_smallest():
+    p = PoolAllocator()
+    p.malloc(1, 4096)
+    p.malloc(9, 512)     # separator between the two future holes
+    p.malloc(2, 1024)
+    p.free(1)
+    p.free(2)
+    off = p.malloc(4, 1024)
+    assert off == 4096 + 512         # the 1024 hole, not the 4096 one
+    assert p.peak == 4096 + 1024 + 512
+
+
+def test_pool_splits_and_coalesces():
+    p = PoolAllocator()
+    p.malloc(1, 4096)
+    p.free(1)
+    a = p.malloc(2, 1024)            # split the 4096 chunk
+    assert a == 0
+    assert p.peak == 4096
+    p.free(2)
+    b = p.malloc(3, 4096)            # coalesced back
+    assert b == 0
+    assert p.peak == 4096
+
+
+def test_naive_never_reuses():
+    n = NaiveAllocator()
+    n.malloc(1, 512)
+    n.free(1)
+    assert n.malloc(2, 512) == 512
+    assert n.peak == 1024
+
+
+def test_replay_orders_events_and_reports():
+    prof = make_profile([(512, 0, 2), (1024, 1, 3), (512, 4, 6)])
+    res_pool = replay(prof, PoolAllocator())
+    res_naive = replay(prof, NaiveAllocator())
+    assert res_pool["n_events"] == 6
+    assert res_pool["peak"] <= res_naive["peak"]
+    assert res_naive["peak"] == prof.total_bytes
+
+
+def test_pool_peak_between_lb_and_naive():
+    import random
+    random.seed(3)
+    items = []
+    for i in range(200):
+        s = random.randint(0, 100)
+        items.append((random.randint(1, 1 << 16), s, s + random.randint(1, 30)))
+    prof = make_profile(items)
+    pool = replay(prof, PoolAllocator())
+    assert prof.liveness_lower_bound() <= pool["peak"] <= prof.total_bytes
