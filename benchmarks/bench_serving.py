@@ -1,19 +1,34 @@
 """Beyond-paper: the DSA planner on LLM serving KV-cache traces.
 
-Requests are rectangles (cache bytes at final length x residency window);
-we compare DSA-planned peak vs the pool baseline vs naive for Poisson-ish
-arrival traces over three assigned archs (dense / MoE / SSM — the SSM row
-shows why O(1)-state archs barely need the planner at all).
+Two levels:
+  * planner level — per arch, the same Poisson-ish trace accounted three
+    ways: paged-DSA (staircase page blocks packed by best-fit), the old
+    slab-per-request accounting (one final-length rectangle per request,
+    naive = no reuse), and the reactive pool replay.  The SSM row shows why
+    O(1)-state archs barely need the planner at all.
+  * engine level — a real (tiny) model driven through the new
+    continuous-batching engine vs the old slot count: tokens/s, peak bytes,
+    and max sustained concurrency.
+
+Emits ``BENCH_serving.json`` (machine-readable) next to the CSV lines to
+seed the perf trajectory.
 """
 from __future__ import annotations
 
+import json
+import os
 import random
 
 from repro.configs import get_config
-from repro.runtime.serve_lib import Request, ServingArena
+from repro.runtime.serve_lib import Request
+from repro.serving import plan_pool
+from repro.serving.pages import choose_page_tokens
+
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 
 
-def synth_trace(n: int, seed: int = 0):
+def synth_trace(n: int, seed: int = 0, prompt_hi: int = 4096,
+                gen_hi: int = 768):
     """Arrivals paced so requests churn (finish while others run) — the
     regime where lifetime-aware packing beats a reactive pool."""
     rng = random.Random(seed)
@@ -22,34 +37,105 @@ def synth_trace(n: int, seed: int = 0):
     for i in range(n):
         t += rng.randint(20, 220)
         reqs.append(Request(rid=i + 1,
-                            prompt_len=rng.randint(64, 4096),
-                            gen_len=rng.randint(32, 768),
+                            prompt_len=rng.randint(64, prompt_hi),
+                            gen_len=rng.randint(32, gen_hi),
                             arrival=t))
     return reqs
 
 
-def rows(quick: bool = False):
-    out = []
-    n = 20 if quick else 200
+def planner_rows(quick: bool = False):
+    out, records = [], []
+    n = 20 if quick else 100
     for arch in ["qwen2-0.5b", "qwen3-moe-30b-a3b", "mistral-nemo-12b",
                  "mamba2-130m"]:
         cfg = get_config(arch)
-        arena = ServingArena(cfg, synth_trace(n))
-        cmp = arena.compare_pool()
-        save = 100 * cmp["saving_vs_pool"]
+        trace = synth_trace(n)
+        # profile-guided page size on the dense flagship; fixed elsewhere
+        if arch == "qwen2-0.5b":
+            plan = choose_page_tokens(cfg, trace, candidates=(32, 64, 128))
+        else:
+            plan = plan_pool(cfg, trace, page_tokens=64)
+        b = plan.baselines
+        save_vs_slab = 1 - b["paged_dsa_peak"] / b["slab_peak"] \
+            if b["slab_peak"] else 0.0
+        rec = {
+            "arch": arch, "n_requests": n,
+            "page_tokens": plan.page_tokens,
+            "n_pages": plan.n_pages,
+            "paged_dsa_peak": b["paged_dsa_peak"],
+            "slab_peak": b["slab_peak"],
+            "pool_peak": b["pool_peak"],
+            "slab_dsa_peak": b["slab_dsa_peak"],
+            "lower_bound": b["lower_bound"],
+            "saving_vs_slab": save_vs_slab,
+        }
+        records.append(rec)
         out.append((f"{arch}/n{n}", 0.0,
-                    f"dsa_GB={cmp['dsa_peak'] / 1e9:.2f};"
-                    f"pool_GB={cmp['pool_peak'] / 1e9:.2f};"
-                    f"naive_GB={cmp['naive_peak'] / 1e9:.2f};"
-                    f"saving_vs_pool={save:.1f}%;"
-                    f"lb_GB={cmp['lower_bound'] / 1e9:.2f}"))
-    return out
+                    f"paged_dsa_GB={b['paged_dsa_peak'] / 1e9:.2f};"
+                    f"slab_GB={b['slab_peak'] / 1e9:.2f};"
+                    f"pool_GB={b['pool_peak'] / 1e9:.2f};"
+                    f"slab_dsa_GB={b['slab_dsa_peak'] / 1e9:.2f};"
+                    f"page_tokens={plan.page_tokens};"
+                    f"saving_vs_slab={100 * save_vs_slab:.1f}%;"
+                    f"lb_GB={b['lower_bound'] / 1e9:.2f}"))
+    return out, records
+
+
+def engine_row(quick: bool = False):
+    """Drive the real tiny model through the new engine; compare sustained
+    concurrency against the old engine's slot count on the same trace."""
+    import jax
+
+    from repro.launch.train import reduced_config
+    from repro.models import Transformer
+    from repro.serving import GenRequest, ServeEngine
+
+    old_slots = 4
+    n_req = 6 if quick else 12
+    cfg, _, _ = reduced_config("qwen2-0.5b", "tiny")
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = [Request(rid=i + 1, prompt_len=8, gen_len=10, arrival=i)
+             for i in range(n_req)]
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
+                      max_batch=2 * old_slots, page_tokens=8)
+    live = [GenRequest(rid=r.rid,
+                       prompt=jax.random.randint(jax.random.PRNGKey(r.rid),
+                                                 (r.prompt_len,), 0,
+                                                 cfg.vocab_size),
+                       gen_len=r.gen_len, arrival=r.arrival)
+            for r in trace]
+    s = eng.run(live)
+    rec = {
+        "n_requests": n_req,
+        "tokens_per_s": s["tokens_per_s"],
+        "tokens": s["tokens"],
+        "paged_pool_bytes": s["kv_pool_bytes"],
+        "paged_planned_peak": s["kv_planned_peak"],
+        "max_concurrent": s["max_concurrent"],
+        "old_engine_slots": old_slots,
+        "n_preemptions": s["n_preemptions"],
+        "n_reopt": s["kv_n_reopt"],
+        "ttft_steps_mean": s["ttft_steps_mean"],
+    }
+    derived = (f"tok_per_s={s['tokens_per_s']:.1f};"
+               f"pool_MB={s['kv_pool_bytes'] / 1e6:.3f};"
+               f"max_concurrent={s['max_concurrent']};"
+               f"old_slots={old_slots};"
+               f"preempt={s['n_preemptions']};reopt={s['kv_n_reopt']}")
+    return (f"engine/qwen2-0.5b-tiny/n{n_req}", 0.0, derived), rec
 
 
 def main(quick: bool = False):
     print("# Serving: name,us_per_call,derived")
-    for name, us, derived in rows(quick):
+    rows, records = planner_rows(quick)
+    for name, us, derived in rows:
         print(f"serve/{name},{us:.3f},{derived}")
+    erow, erec = engine_row(quick)
+    print(f"serve/{erow[0]},{erow[1]:.3f},{erow[2]}")
+    with open(OUT_JSON, "w") as f:
+        json.dump({"planner": records, "engine": erec}, f, indent=2)
+    print(f"# wrote {OUT_JSON}")
 
 
 if __name__ == "__main__":

@@ -8,20 +8,42 @@
   roofline (optional, needs results/dryrun)                (EXPERIMENTS §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV per line.
-Env: BENCH_QUICK=1 for the fast variant (used by CI/tests).
+Env: BENCH_QUICK=1 (or --quick) for the fast variant (used by CI/tests).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 import traceback
 
 
+def _import_benches():
+    try:
+        from . import (bench_alloc_time, bench_heuristic, bench_memory,
+                       bench_reopt, bench_serving)
+    except ImportError:
+        # script mode (`python benchmarks/run.py`): repo root + src on path,
+        # then import the benchmarks namespace package absolutely
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        for p in (root, os.path.join(root, "src")):
+            if p not in sys.path:
+                sys.path.insert(0, p)
+        from benchmarks import (bench_alloc_time, bench_heuristic,
+                                bench_memory, bench_reopt, bench_serving)
+    return (bench_alloc_time, bench_heuristic, bench_memory, bench_reopt,
+            bench_serving)
+
+
 def main() -> None:
-    quick = bool(int(os.environ.get("BENCH_QUICK", "0")))
-    from . import (bench_alloc_time, bench_heuristic, bench_memory,
-                   bench_reopt, bench_serving)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fast variant (same as BENCH_QUICK=1)")
+    args, _ = ap.parse_known_args()
+    quick = args.quick or bool(int(os.environ.get("BENCH_QUICK", "0")))
+    (bench_alloc_time, bench_heuristic, bench_memory,
+     bench_reopt, bench_serving) = _import_benches()
     sections = [
         ("fig2", bench_memory.main),
         ("fig3", bench_alloc_time.main),

@@ -1,4 +1,8 @@
-"""Batched serving example: DSA-planned KV arena + slot-based decode engine.
+"""Continuous-batching serving example: profile-guided paged KV-cache engine.
+
+Requests flow queue -> chunked prefill -> batched decode -> completion with
+zero manual submit() calls; the page pool is sized by planning a sample
+trace with the paper's best-fit DSA heuristic.
 
   PYTHONPATH=src python examples/serve_decode.py --arch qwen2-0.5b --requests 6
 """

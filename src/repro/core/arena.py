@@ -154,6 +154,12 @@ class ArenaAllocator:
     def peak(self) -> int:
         return self.plan.peak
 
+    def request_replan(self) -> None:
+        """Force a §4.3 boundary replan from the shadow-observed stream at the
+        next ``reset_iteration()`` (callers flag observed memory pressure the
+        lambda stream itself cannot see, e.g. serving preemption)."""
+        self._dirty = True
+
     # -- §4.3: interrupt/resume ----------------------------------------------------
     def interrupt(self) -> None:
         self._interrupted += 1

@@ -1,8 +1,11 @@
-"""Serving driver: batched decode with the DSA-planned KV arena.
+"""Serving driver: the continuous-batching engine on the paged KV-cache.
 
-Runs a real (reduced) model through the slot-based engine over a synthetic
-request trace, reporting throughput and the arena-vs-pool memory comparison
-(the paper's contribution as a serving feature).
+Runs a real (reduced) model through ``repro.serving.ServeEngine`` over a
+synthetic request trace — requests flow queue -> chunked prefill -> batched
+decode -> completion with zero manual submit() calls — and reports
+throughput, TTFT, page-pool telemetry, and the arena-vs-pool memory
+comparison at full arch scale (``ServingArena`` is kept as the
+slab-per-request baseline).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --requests 8
 """
@@ -10,15 +13,26 @@ from __future__ import annotations
 
 import argparse
 import random
-import time
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import get_config
 from ..models import Transformer
-from ..runtime.serve_lib import Request, ServeEngine
+from ..runtime.serve_lib import Request, ServingArena
+from ..serving import GenRequest, ServeEngine
 from .train import reduced_config
+
+
+def synth_trace(n: int, prompt_len: int, gen_len: int, seed: int = 0,
+                jitter: bool = True) -> list[Request]:
+    rng = random.Random(seed)
+    trace, t = [], 0
+    for i in range(n):
+        t += rng.randint(0, 4)
+        g = gen_len + (rng.randint(-gen_len // 3, gen_len // 3) if jitter else 0)
+        trace.append(Request(rid=i + 1, prompt_len=prompt_len,
+                             gen_len=max(2, g), arrival=t))
+    return trace
 
 
 def main() -> None:
@@ -26,55 +40,62 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--preset", default="tiny")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen-len", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-tokens", type=int, default=None,
+                    help="page size in tokens (default: profile-guided)")
+    ap.add_argument("--policy", choices=["fcfs", "priority"], default="fcfs")
+    ap.add_argument("--prefill-chunk", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg, _, _ = reduced_config(args.arch, args.preset)
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    rng = random.Random(args.seed)
 
-    trace = []
-    t = 0
-    for i in range(args.requests):
-        t += rng.randint(0, 4)
-        trace.append(Request(rid=i + 1, prompt_len=args.prompt_len,
-                             gen_len=args.gen_len, arrival=t))
+    # profile run: the sample trace the planner sizes the page pool from
+    trace = synth_trace(args.requests, args.prompt_len, args.gen_len,
+                        seed=args.seed, jitter=False)
 
     # full-size arch for the memory accounting; reduced model for execution
     full_cfg = get_config(args.arch)
-    from ..runtime.serve_lib import ServingArena
     acct = ServingArena(full_cfg, trace)
     cmp = acct.compare_pool()
-    print(f"[{args.arch} @ full size] arena plan for {len(trace)} requests: "
+    print(f"[{args.arch} @ full size] slab baseline for {len(trace)} requests: "
           f"dsa={cmp['dsa_peak'] / 1e9:.2f}GB pool={cmp['pool_peak'] / 1e9:.2f}GB "
           f"naive={cmp['naive_peak'] / 1e9:.2f}GB "
           f"saving_vs_pool={100 * cmp['saving_vs_pool']:.1f}%")
 
-    eng = ServeEngine(model, params, batch_slots=args.slots,
-                      max_len=args.max_len, sample_trace=trace)
-    pending = list(trace)
-    t0 = time.time()
-    n_tokens = 0
-    while pending or eng.active():
-        while pending and eng.active() < args.slots:
-            r = pending[0]
-            prompt = jax.random.randint(jax.random.PRNGKey(r.rid),
-                                        (r.prompt_len,), 0, cfg.vocab_size)
-            if not eng.submit(r, prompt):
-                break
-            pending.pop(0)
-        if eng.active():
-            eng.step()
-            n_tokens += eng.active() + 1
-    dt = time.time() - t0
-    print(f"completed {len(eng.completed)} requests, ~{n_tokens} tokens "
-          f"in {dt:.1f}s ({n_tokens / max(dt, 1e-9):.1f} tok/s)")
-    print("arena stats:", eng.arena.stats())
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=args.max_len,
+                      max_batch=args.max_batch, page_tokens=args.page_tokens,
+                      policy=args.policy, prefill_chunk=args.prefill_chunk,
+                      accounting_cfg=full_cfg)
+    kv = eng.kv.stats()
+    print(f"[paged pool] page_tokens={kv['page_tokens']} "
+          f"n_pages={kv['n_pages']} pool={kv['pool_bytes'] / 1e6:.2f}MB "
+          f"(planned peak {kv['planned_peak'] / 1e6:.2f}MB)")
+
+    # live traffic: same shapes with jitter, so some requests outgrow the
+    # profile and exercise preemption + §4.3 replanning
+    rng = random.Random(args.seed + 1)
+    live = [GenRequest(rid=r.rid,
+                       prompt=jax.random.randint(jax.random.PRNGKey(r.rid),
+                                                 (r.prompt_len,), 0,
+                                                 cfg.vocab_size),
+                       gen_len=max(2, r.gen_len + rng.randint(-2, 6)),
+                       arrival=r.arrival)
+            for r in trace]
+    summary = eng.run(live)
+    ttft = summary["ttft_steps_mean"]
+    print(f"completed {summary['n_completed']}/{summary['n_requests']} "
+          f"requests, {summary['tokens']} tokens in {summary['wall_s']:.1f}s "
+          f"({summary['tokens_per_s']:.1f} tok/s), "
+          f"ttft_mean={'n/a' if ttft is None else f'{ttft:.1f}'} steps, "
+          f"max_concurrent={summary['max_concurrent']}, "
+          f"preemptions={summary['n_preemptions']}, "
+          f"reopts={summary['kv_n_reopt']}")
     for rid in sorted(eng.completed)[:3]:
         print(f"  req {rid}: {eng.completed[rid][:8]}...")
 

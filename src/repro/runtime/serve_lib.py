@@ -8,7 +8,7 @@ seq2seq workaround from the paper, applied to LLM serving.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
@@ -196,106 +196,16 @@ class ServingArena:
 
 
 # ---------------------------------------------------------------------------
-# a small but real batched engine (examples/serve_decode.py, tests)
+# engine relocation
 # ---------------------------------------------------------------------------
+# The slot-based ServeEngine that used to live here was rewritten as the
+# continuous-batching engine in ``repro.serving`` (queue + chunked prefill +
+# paged KV-cache + preemption).  ``ServingArena`` above stays as the
+# slab-per-request comparison baseline.  Lazy re-export for old call sites:
 
 
-@dataclass
-class _Slot:
-    rid: int = -1
-    remaining: int = 0
-    offset: int = -1
-    out: list = field(default_factory=list)
-
-
-class ServeEngine:
-    """Slot-based batched decode engine with arena-tracked cache memory."""
-
-    def __init__(self, model: Transformer, params, batch_slots: int,
-                 max_len: int, sample_trace: list[Request],
-                 mesh: Optional[Mesh] = None):
-        self.model = model
-        self.params = params
-        self.b = batch_slots
-        self.max_len = max_len
-        self.arena = ServingArena(model.cfg, sample_trace)
-        self.decode = build_decode_step(model, mesh, donate=False)
-        self.prefill = build_prefill_step(model, mesh)
-        self.slots = [_Slot() for _ in range(batch_slots)]
-        self.cache = model.init_cache(batch_slots, max_len)
-        self.tokens = jnp.zeros((batch_slots,), jnp.int32)
-        self.step_count = 0
-        self.completed: dict[int, list[int]] = {}
-
-    def _free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s.rid < 0:
-                return i
-        return None
-
-    def submit(self, r: Request, prompt_tokens) -> bool:
-        """Admit request r (single-request prefill into a free slot)."""
-        i = self._free_slot()
-        if i is None:
-            return False
-        offset = self.arena.admit(r)
-        logits, cache1 = self.prefill(self.params,
-                                      {"tokens": prompt_tokens[None, :]},
-                                      )
-        # write slot i of the batched cache from the single-request cache
-        self.cache = _merge_slot(self.cache, cache1, i, self.max_len)
-        tok = jnp.argmax(logits[0]).astype(jnp.int32)
-        self.tokens = self.tokens.at[i].set(tok)
-        # prefill already produced the first generated token
-        slot = _Slot(rid=r.rid, remaining=r.gen_len - 1, offset=offset,
-                     out=[int(tok)])
-        if slot.remaining <= 0:
-            self.arena.finish(offset)
-            self.completed[r.rid] = slot.out
-            return True
-        self.slots[i] = slot
-        return True
-
-    def step(self) -> None:
-        logits, self.cache = self.decode(self.params, self.cache, self.tokens)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.tokens = nxt
-        self.step_count += 1
-        for i, s in enumerate(self.slots):
-            if s.rid < 0:
-                continue
-            s.out.append(int(nxt[i]))
-            s.remaining -= 1
-            if s.remaining <= 0:
-                self.arena.finish(s.offset)
-                self.completed[s.rid] = s.out
-                self.slots[i] = _Slot()
-
-    def active(self) -> int:
-        return sum(1 for s in self.slots if s.rid >= 0)
-
-
-def _merge_slot(batched_cache, single_cache, slot: int, max_len: int):
-    """Copy one request's prefill cache into slot ``slot`` of the batch cache.
-
-    Pattern-group leaves are (G, B, ...) — batch axis 1; tail leaves are
-    (B, ...) — batch axis 0; "pos" is a scalar (engine keeps the max)."""
-    b_paths = jax.tree_util.tree_flatten_with_path(batched_cache)
-    s_leaves = jax.tree_util.tree_flatten(single_cache)[0]
-    treedef = jax.tree_util.tree_structure(batched_cache)
-    out = []
-    for (kp, b), s in zip(b_paths[0], s_leaves):
-        path = tuple(str(getattr(k, "key", "")) for k in kp)
-        if b.ndim == 0:                     # pos
-            out.append(jnp.maximum(b, s))
-            continue
-        axis = 1 if "pattern" in path else 0
-        pads = [(0, 0)] * b.ndim
-        for d in range(b.ndim):
-            if d != axis and s.shape[d] < b.shape[d]:
-                pads[d] = (0, b.shape[d] - s.shape[d])
-        sp = jnp.pad(s, pads)
-        idx = [slice(None)] * b.ndim
-        idx[axis] = slice(slot, slot + 1)
-        out.append(b.at[tuple(idx)].set(sp))
-    return jax.tree_util.tree_unflatten(treedef, out)
+def __getattr__(name: str):
+    if name == "ServeEngine":
+        from ..serving.engine import ServeEngine
+        return ServeEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,27 @@
+"""repro.serving — continuous-batching engine with a profile-guided paged KV-cache.
+
+The paper's planner, applied online: a sample trace of requests is profiled
+as 2-D rectangles (paged, so each request is a *staircase* of fixed-size
+pages that become live as tokens are generated), packed with the best-fit
+DSA heuristic, and the resulting planned peak sizes the physical page pool.
+On top of that pool sits a continuous-batching scheduler (waiting queue,
+FCFS/priority admission, chunked prefill, preemption) and a batched decode
+engine with telemetry.
+
+Public API:
+  - pages:     PagePlan, PagedKVCache, choose_page_tokens, paged_request_blocks
+  - scheduler: GenRequest, Scheduler, RequestState
+  - engine:    ServeEngine (relocated from repro.runtime.serve_lib)
+  - metrics:   ServeMetrics
+"""
+from .engine import ServeEngine
+from .metrics import ServeMetrics
+from .pages import (PagePlan, PagedKVCache, PagePoolExhausted,
+                    choose_page_tokens, paged_request_blocks, plan_pool)
+from .scheduler import GenRequest, RequestState, Scheduler
+
+__all__ = [
+    "GenRequest", "PagePlan", "PagePoolExhausted", "PagedKVCache",
+    "RequestState", "Scheduler", "ServeEngine", "ServeMetrics",
+    "choose_page_tokens", "paged_request_blocks", "plan_pool",
+]

@@ -1,0 +1,184 @@
+"""Continuous-batching decode engine on the profile-guided paged KV-cache.
+
+Relocated and rewritten from ``repro.runtime.serve_lib.ServeEngine``: the old
+engine exposed manual ``submit()`` onto fixed slots with contiguous
+final-length slabs; this one owns a waiting queue and admits from it every
+step (``GenRequest.arrival`` honored by ``run()``), runs chunked prefill,
+batched greedy decode, preempts on page-pool exhaustion, and replans the
+pool at epoch boundaries when observed generation lengths outgrow the
+profile (§4.3 under serving churn).
+
+Physical execution note (matches the seed engine): slot caches share the
+model's global position clock, so mid-stream admissions are approximate for
+unequal prompt lengths; memory accounting and scheduling are exact.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..configs.base import ModelConfig
+from ..models.transformer import Transformer
+from ..runtime.serve_lib import (Request, build_decode_step,
+                                 build_prefill_step)
+from . import pages as pages_lib
+from .metrics import ServeMetrics
+from .pages import PagePoolExhausted, PagedKVCache
+from .scheduler import GenRequest, RequestState, ScheduledRequest, Scheduler
+
+
+class ServeEngine:
+    """Queue -> chunked prefill -> batched decode, memory-planned end to end."""
+
+    def __init__(self, model: Transformer, params, *,
+                 sample_trace: Sequence[Request], max_len: int,
+                 max_batch: int = 8, page_tokens: Optional[int] = None,
+                 policy: str = "fcfs", prefill_chunk: int = 512,
+                 hbm_budget: Optional[int] = None, reserve_pages: int = 0,
+                 accounting_cfg: Optional[ModelConfig] = None,
+                 mesh: Optional[Mesh] = None):
+        """``accounting_cfg`` lets the page pool account at full-size arch
+        scale while a reduced model executes (the launch-driver pattern)."""
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.max_batch = max_batch
+        acct = accounting_cfg or model.cfg
+        self.kv = PagedKVCache(acct, sample_trace, page_tokens=page_tokens,
+                               reserve_pages=reserve_pages)
+        cap = None
+        if hbm_budget is not None:
+            cap = pages_lib.max_concurrency(acct, sample_trace,
+                                            self.kv.page_tokens, hbm_budget)
+        self.sched = Scheduler(self.kv, max_batch=max_batch, policy=policy,
+                               max_concurrency=cap, prefill_chunk=prefill_chunk)
+        self.metrics = ServeMetrics()
+        self.prefill = build_prefill_step(model, mesh)
+        self.decode = build_decode_step(model, mesh, donate=False)
+        self.cache = model.init_cache(max_batch, max_len)
+        self.tokens = jnp.zeros((max_batch,), jnp.int32)
+        self.step_count = 0
+        self.completed: dict[int, list[int]] = {}
+
+    # -- queue --------------------------------------------------------------------
+    def enqueue(self, req: GenRequest) -> None:
+        self.sched.enqueue(req)
+        self.metrics.on_enqueue(req.rid, int(req.prompt.shape[0]),
+                                self.step_count)
+
+    @property
+    def n_active(self) -> int:
+        return self.sched.n_active
+
+    # -- one engine step ------------------------------------------------------------
+    def step(self) -> None:
+        for sr in self.sched.admit(self.step_count):
+            self.metrics.on_admit(sr.rid, self.step_count)
+        for sr in self.sched.prefill_batch():
+            if sr.state is RequestState.RUNNING:    # not preempted by an
+                self._model_prefill(sr)             # earlier grow this step
+        self._decode_running()
+        self.metrics.on_step(concurrent=self.sched.n_active,
+                             occupancy=self.kv.occupancy(),
+                             queue_depth=self.sched.queue_depth)
+        self.step_count += 1
+        if self.sched.idle:
+            self.kv.reset_epoch()       # epoch boundary: §4.3 replan if dirty
+
+    def _model_prefill(self, sr: ScheduledRequest) -> None:
+        self.metrics.n_prefill_tokens += sr.prompt_len
+        logits, cache1 = self.prefill(self.params, {"tokens": sr.req.prompt[None, :]})
+        self.cache = _merge_slot(self.cache, cache1, sr.slot, self.max_len)
+        tok = jnp.argmax(logits[0]).astype(jnp.int32)
+        self.tokens = self.tokens.at[sr.slot].set(tok)
+        if not self._grow(sr):          # prefill already yields one token
+            return
+        sr.out.append(int(tok))
+        self.metrics.on_first_token(sr.rid, self.step_count)
+        self.metrics.on_token(sr.rid)
+        if sr.remaining <= 0:
+            self._finish(sr)
+
+    def _decode_running(self) -> None:
+        running = sorted(self.sched.running(), key=lambda s: s.slot)
+        if not running:
+            return
+        logits, self.cache = self.decode(self.params, self.cache, self.tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = nxt
+        for sr in running:
+            if sr.state is not RequestState.RUNNING:
+                continue                # preempted by an earlier grow this step
+            if not self._grow(sr):
+                continue                # sr itself was the preemption victim
+            sr.out.append(int(nxt[sr.slot]))
+            self.metrics.on_token(sr.rid)
+            if sr.remaining <= 0:
+                self._finish(sr)
+
+    def _grow(self, sr: ScheduledRequest) -> bool:
+        """Account one generated token; preempt the youngest request until the
+        growth page fits.  Returns False if ``sr`` itself was evicted."""
+        while True:
+            try:
+                self.kv.append_token(sr.rid)
+                return True
+            except PagePoolExhausted:
+                self.kv.request_replan()    # observed lengths outgrew the plan
+                if self.sched.n_active <= 1:
+                    # no other victim: grow the pool rather than thrash
+                    self.kv.ensure_free(1)
+                    continue
+                victim = self.sched.preempt_victim()
+                self.metrics.on_preempt(victim.rid,
+                                        discarded_tokens=len(victim.out))
+                if victim.rid == sr.rid:
+                    return False
+
+    def _finish(self, sr: ScheduledRequest) -> None:
+        self.completed[sr.rid] = sr.out
+        self.sched.finish(sr)
+        self.metrics.on_finish(sr.rid, self.step_count)
+
+    # -- drive a whole trace ----------------------------------------------------------
+    def run(self, requests: Sequence[GenRequest],
+            max_steps: int = 100_000) -> dict:
+        """Feed requests by ``arrival`` step and run until everything drains.
+        Zero manual submit() calls: queue -> prefill -> decode -> completion."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        while pending or not self.sched.idle:
+            while pending and pending[0].arrival <= self.step_count:
+                self.enqueue(pending.pop(0))
+            self.step()
+            if self.step_count >= max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return self.metrics.summary(self.kv.stats())
+
+
+def _merge_slot(batched_cache, single_cache, slot: int, max_len: int):
+    """Copy one request's prefill cache into slot ``slot`` of the batch cache.
+
+    Pattern-group leaves are (G, B, ...) — batch axis 1; tail leaves are
+    (B, ...) — batch axis 0; "pos" is a scalar (engine keeps the max)."""
+    b_paths = jax.tree_util.tree_flatten_with_path(batched_cache)
+    s_leaves = jax.tree_util.tree_flatten(single_cache)[0]
+    treedef = jax.tree_util.tree_structure(batched_cache)
+    out = []
+    for (kp, b), s in zip(b_paths[0], s_leaves):
+        path = tuple(str(getattr(k, "key", "")) for k in kp)
+        if b.ndim == 0:                     # pos
+            out.append(jnp.maximum(b, s))
+            continue
+        axis = 1 if "pattern" in path else 0
+        pads = [(0, 0)] * b.ndim
+        for d in range(b.ndim):
+            if d != axis and s.shape[d] < b.shape[d]:
+                pads[d] = (0, b.shape[d] - s.shape[d])
+        sp = jnp.pad(s, pads)
+        idx = [slice(None)] * b.ndim
+        idx[axis] = slice(slot, slot + 1)
+        out.append(b.at[tuple(idx)].set(sp))
+    return jax.tree_util.tree_unflatten(treedef, out)

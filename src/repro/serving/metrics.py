@@ -1,0 +1,116 @@
+"""Serving telemetry: per-request latency + engine/pool counters.
+
+Step-indexed (deterministic, test-friendly) and wall-clock (throughput)
+views of the same run.  ``summary()`` is the machine-readable record the
+benchmarks dump into ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class RequestMetrics:
+    rid: int
+    prompt_len: int
+    enqueue_step: int
+    admit_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    n_preempt: int = 0
+    n_generated: int = 0
+
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        if self.first_token_step is None:
+            return None
+        return self.first_token_step - self.enqueue_step
+
+    @property
+    def queue_steps(self) -> Optional[int]:
+        if self.admit_step is None:
+            return None
+        return self.admit_step - self.enqueue_step
+
+
+@dataclass
+class ServeMetrics:
+    requests: dict[int, RequestMetrics] = field(default_factory=dict)
+    n_steps: int = 0
+    n_decode_tokens: int = 0        # tokens produced by batched decode steps
+    n_prefill_tokens: int = 0       # prompt tokens processed (chunked)
+    n_preemptions: int = 0
+    n_discarded_tokens: int = 0     # generated then thrown away by preemption
+    max_concurrent: int = 0
+    occupancy_samples: list = field(default_factory=list)
+    queue_depth_samples: list = field(default_factory=list)
+    _t0: float = field(default_factory=time.perf_counter)
+    _wall: float = 0.0
+
+    # -- recording ---------------------------------------------------------------
+    def on_enqueue(self, rid: int, prompt_len: int, step: int) -> None:
+        self.requests[rid] = RequestMetrics(rid=rid, prompt_len=prompt_len,
+                                            enqueue_step=step)
+
+    def on_admit(self, rid: int, step: int) -> None:
+        r = self.requests[rid]
+        if r.admit_step is None:
+            r.admit_step = step
+
+    def on_first_token(self, rid: int, step: int) -> None:
+        r = self.requests[rid]
+        if r.first_token_step is None:
+            r.first_token_step = step
+
+    def on_token(self, rid: int) -> None:
+        self.requests[rid].n_generated += 1
+        self.n_decode_tokens += 1
+
+    def on_preempt(self, rid: int, discarded_tokens: int = 0) -> None:
+        """``discarded_tokens``: generated output thrown away by the eviction
+        (recompute-on-resume), so throughput can separate work from goodput."""
+        self.requests[rid].n_preempt += 1
+        self.n_preemptions += 1
+        self.n_discarded_tokens += discarded_tokens
+
+    def on_finish(self, rid: int, step: int) -> None:
+        self.requests[rid].finish_step = step
+
+    def on_step(self, concurrent: int, occupancy: float,
+                queue_depth: int) -> None:
+        self.n_steps += 1
+        self.max_concurrent = max(self.max_concurrent, concurrent)
+        self.occupancy_samples.append(occupancy)
+        self.queue_depth_samples.append(queue_depth)
+        self._wall = time.perf_counter() - self._t0
+
+    # -- reporting ---------------------------------------------------------------
+    def summary(self, kv_stats: Optional[dict] = None) -> dict:
+        done = [r for r in self.requests.values() if r.finish_step is not None]
+        ttfts = [r.ttft_steps for r in done if r.ttft_steps is not None]
+        wall = max(self._wall, 1e-9)
+        out = {
+            "n_requests": len(self.requests),
+            "n_completed": len(done),
+            "n_steps": self.n_steps,
+            "wall_s": self._wall,
+            "tokens": self.n_decode_tokens,
+            "tokens_per_s": self.n_decode_tokens / wall,
+            "tokens_discarded": self.n_discarded_tokens,
+            "goodput_tokens_per_s":
+                (self.n_decode_tokens - self.n_discarded_tokens) / wall,
+            "prefill_tokens": self.n_prefill_tokens,
+            "ttft_steps_mean": sum(ttfts) / len(ttfts) if ttfts else None,
+            "ttft_steps_max": max(ttfts) if ttfts else None,
+            "max_concurrent": self.max_concurrent,
+            "n_preemptions": self.n_preemptions,
+            "occupancy_peak": max(self.occupancy_samples, default=0.0),
+            "occupancy_mean": (sum(self.occupancy_samples)
+                               / len(self.occupancy_samples)
+                               if self.occupancy_samples else 0.0),
+        }
+        if kv_stats:
+            out.update({f"kv_{k}": v for k, v in kv_stats.items()})
+        return out

@@ -1,6 +1,9 @@
 """Hypothesis property tests: system invariants of the DSA solvers."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import best_fit, make_profile, solve_exact, validate_plan
 from repro.core.pool import NaiveAllocator, PoolAllocator, replay

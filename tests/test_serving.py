@@ -5,9 +5,10 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import Transformer
-from repro.runtime.serve_lib import (Request, ServeEngine, ServingArena,
+from repro.runtime.serve_lib import (Request, ServingArena,
                                      cache_bytes_per_token, request_blocks,
                                      state_bytes)
+from repro.serving import GenRequest, ServeEngine
 
 
 def _trace():
@@ -72,10 +73,14 @@ def test_engine_generates_greedy_reference(rng_key):
         out_ref.append(nxt)
         toks.append(nxt)
 
-    eng = ServeEngine(model, params, batch_slots=2, max_len=16,
+    # relocated engine: the request is queued, never manually submitted
+    eng = ServeEngine(model, params, max_batch=2, max_len=16,
                       sample_trace=[Request(1, 6, 5, 0)])
-    assert eng.submit(Request(1, 6, 5, 0), prompt)
-    while eng.active():
-        eng.step()
+    eng.run([GenRequest(rid=1, prompt=prompt, gen_len=5)])
     assert eng.completed[1] == out_ref
-    assert eng.arena.stats()["n_reopt"] == 0
+    # exact replay of the profiled trace: O(1) allocs, no replanning
+    assert eng.kv.arena.stats()["n_reopt"] == 0
+
+    # lazy relocation shim still resolves for old call sites
+    from repro.runtime import serve_lib
+    assert serve_lib.ServeEngine is ServeEngine

@@ -1,0 +1,298 @@
+"""repro.serving: paged KV-cache planning, continuous batching, reopt churn."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import Transformer
+from repro.runtime.serve_lib import Request
+from repro.serving import (GenRequest, PagedKVCache, PagePoolExhausted,
+                           Scheduler, ServeEngine, choose_page_tokens,
+                           paged_request_blocks, plan_pool)
+from repro.serving.pages import max_concurrency, pages_for_tokens
+
+
+def _trace():
+    return [Request(rid=1, prompt_len=64, gen_len=32, arrival=0),
+            Request(rid=2, prompt_len=128, gen_len=16, arrival=8),
+            Request(rid=3, prompt_len=32, gen_len=48, arrival=24),
+            Request(rid=4, prompt_len=64, gen_len=32, arrival=40)]
+
+
+# ---------------------------------------------------------------------------
+# pages: profile-guided planning
+# ---------------------------------------------------------------------------
+
+
+def test_paged_plan_beats_slab_on_dense_arch():
+    cfg = get_config("qwen2-0.5b")
+    plan = plan_pool(cfg, _trace(), page_tokens=16)
+    b = plan.baselines
+    assert b["paged_dsa_peak"] <= b["slab_peak"]
+    assert b["paged_dsa_peak"] <= b["pool_peak"]
+    assert b["paged_dsa_peak"] >= b["lower_bound"]
+    assert plan.pool_bytes >= plan.planned_peak
+
+
+def test_staircase_blocks_grow_late():
+    """Growth pages must become live strictly after admission."""
+    cfg = get_config("qwen2-0.5b")
+    prof = paged_request_blocks(_trace(), cfg, page_tokens=8)
+    by_req = {}
+    for blk in prof.blocks:
+        rid = int(blk.tag.split("/")[0][3:])
+        by_req.setdefault(rid, []).append(blk)
+    r1 = sorted(by_req[1], key=lambda b: b.start)
+    assert r1[0].start == 0
+    assert r1[-1].start > 0                 # staircase, not a slab
+    assert all(b.end == 32 for b in r1)     # all pages die at finish
+
+
+def test_choose_page_tokens_minimizes_cost():
+    cfg = get_config("qwen2-0.5b")
+    best = choose_page_tokens(cfg, _trace(), candidates=(8, 32, 128))
+    for pt in (8, 32, 128):
+        assert best.cost() <= plan_pool(cfg, _trace(), pt).cost()
+
+
+def test_ssm_requests_never_grow():
+    cfg = get_config("mamba2-130m")
+    assert pages_for_tokens(cfg, 64, 10) == pages_for_tokens(cfg, 64, 10_000)
+
+
+def test_max_concurrency_is_hbm_gated():
+    cfg = get_config("qwen2-0.5b")
+    small = max_concurrency(cfg, _trace(), 16, hbm_budget=8 * 2 ** 20, hi=64)
+    big = max_concurrency(cfg, _trace(), 16, hbm_budget=2 ** 33, hi=64)
+    assert small <= big
+    assert big >= 1
+
+
+# ---------------------------------------------------------------------------
+# pages: runtime pool
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_never_shares_pages():
+    cfg = get_config("qwen2-0.5b")
+    kv = PagedKVCache(cfg, _trace(), page_tokens=8, reserve_pages=4)
+    kv.admit(1, 64)
+    kv.admit(2, 128)
+    for _ in range(20):
+        kv.append_token(1)
+    live = [p for t in kv.tables.values() for p in t]
+    assert len(live) == len(set(live))      # no page belongs to two requests
+    assert kv.used_pages == len(live)
+    kv.release(1)
+    assert 1 not in kv.tables
+    kv.release(2)
+    assert kv.used_pages == 0
+
+
+def test_page_pool_exhaustion_raises():
+    cfg = get_config("qwen2-0.5b")
+    trace = [Request(rid=1, prompt_len=8, gen_len=2, arrival=0)]
+    kv = PagedKVCache(cfg, trace, page_tokens=8)
+    kv.admit(1, 8)
+    with pytest.raises(PagePoolExhausted):
+        for _ in range(10_000):
+            kv.append_token(1)
+
+
+def test_pool_resizes_at_epoch_boundary_after_overflow():
+    cfg = get_config("qwen2-0.5b")
+    trace = [Request(rid=1, prompt_len=8, gen_len=4, arrival=0)]
+    kv = PagedKVCache(cfg, trace, page_tokens=8, reserve_pages=8)
+    kv.admit(1, 8)
+    for _ in range(60):                     # way past the profiled length
+        kv.append_token(1)
+    kv.release(1)
+    before = kv.stats()["n_pages"]
+    kv.reset_epoch()
+    after = kv.stats()
+    assert after["n_reopt"] >= 1            # §4.3 boundary replan happened
+    assert after["n_pages"] >= before       # pool resized up to observed peak
+
+
+def test_append_token_retry_does_not_double_count():
+    """A PagePoolExhausted retry must not inflate the accounted context."""
+    cfg = get_config("qwen2-0.5b")
+    trace = [Request(rid=1, prompt_len=8, gen_len=2, arrival=0)]
+    kv = PagedKVCache(cfg, trace, page_tokens=8)
+    kv.admit(1, 8)
+    before = kv._tokens[1]
+    with pytest.raises(PagePoolExhausted):
+        for _ in range(10_000):
+            kv.append_token(1)
+    failed_at = kv._tokens[1]
+    kv.ensure_free(4)
+    kv.append_token(1)                  # the retry lands the same token once
+    assert kv._tokens[1] == failed_at + 1
+    assert before < failed_at
+
+
+def test_pool_shrink_never_aliases_live_pages():
+    """Shrinking at a boundary must not re-issue page ids still held."""
+    cfg = get_config("qwen2-0.5b")
+    trace = [Request(rid=1, prompt_len=8, gen_len=4, arrival=0)]
+    kv = PagedKVCache(cfg, trace, page_tokens=8)
+    kv.ensure_free(20)                  # inflate the pool
+    kv.admit(1, 8)
+    # force request 1 onto high page ids
+    kv.tables[1] = [kv.n_pages - 1]
+    kv._free = [p for p in kv._free if p != kv.n_pages - 1]
+    held = set(kv.tables[1])
+    kv.reset_epoch()                    # wants to shrink back to the plan
+    assert all(p < kv.n_pages for p in kv.tables[1])
+    kv.ensure_free(kv.free_pages + 3)   # growth must not hand out held ids
+    assert held.isdisjoint(kv._free)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def _mk_req(rid, prompt_len, gen_len, priority=0, arrival=0):
+    return GenRequest(rid=rid, prompt=jnp.zeros((prompt_len,), jnp.int32),
+                      gen_len=gen_len, priority=priority, arrival=arrival)
+
+
+def test_scheduler_fcfs_no_overtake():
+    cfg = get_config("qwen2-0.5b")
+    kv = PagedKVCache(cfg, _trace(), page_tokens=8)
+    sched = Scheduler(kv, max_batch=2, policy="fcfs")
+    for rid in (1, 2, 3):
+        sched.enqueue(_mk_req(rid, 16, 4))
+    admitted = sched.admit(step=0)
+    assert [s.rid for s in admitted] == [1, 2]      # slots cap at 2, in order
+    assert sched.queue_depth == 1
+
+
+def test_scheduler_priority_policy():
+    cfg = get_config("qwen2-0.5b")
+    kv = PagedKVCache(cfg, _trace(), page_tokens=8)
+    sched = Scheduler(kv, max_batch=1, policy="priority")
+    sched.enqueue(_mk_req(1, 16, 4, priority=0))
+    sched.enqueue(_mk_req(2, 16, 4, priority=5))
+    admitted = sched.admit(step=0)
+    assert [s.rid for s in admitted] == [2]         # urgent first
+
+
+def test_scheduler_preempts_youngest():
+    cfg = get_config("qwen2-0.5b")
+    kv = PagedKVCache(cfg, _trace(), page_tokens=8)
+    sched = Scheduler(kv, max_batch=4)
+    sched.enqueue(_mk_req(1, 16, 4))
+    sched.admit(step=0)
+    sched.enqueue(_mk_req(2, 16, 4))
+    sched.admit(step=3)
+    victim = sched.preempt_victim()
+    assert victim.rid == 2                          # latest admission loses
+    assert sched.waiting[0].rid == 2                # requeued at the head
+    assert 2 not in kv.tables                       # pages returned
+
+
+def test_chunked_prefill_budget():
+    cfg = get_config("qwen2-0.5b")
+    trace = [Request(rid=1, prompt_len=64, gen_len=4, arrival=0)]
+    kv = PagedKVCache(cfg, trace, page_tokens=16)
+    sched = Scheduler(kv, max_batch=1, prefill_chunk=16)
+    sched.enqueue(_mk_req(1, 64, 4))
+    sched.admit(step=0)
+    done_at = None
+    for step in range(10):
+        if sched.prefill_batch():
+            done_at = step
+            break
+    assert done_at == 3                             # 64 tokens / 16 per step
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end (tiny real model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2-0.5b").smoke()
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _live(cfg, trace, gen_override=None):
+    return [GenRequest(rid=r.rid,
+                       prompt=jax.random.randint(jax.random.PRNGKey(r.rid),
+                                                 (r.prompt_len,), 0,
+                                                 cfg.vocab_size),
+                       gen_len=(gen_override or {}).get(r.rid, r.gen_len),
+                       arrival=r.arrival)
+            for r in trace]
+
+
+def test_engine_queue_flow_end_to_end(tiny_model):
+    """queue -> chunked prefill -> batched decode -> completion, no submit()."""
+    cfg, model, params = tiny_model
+    trace = [Request(rid=i + 1, prompt_len=8, gen_len=6, arrival=i)
+             for i in range(5)]
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=32,
+                      max_batch=4, page_tokens=8)
+    summary = eng.run(_live(cfg, trace))
+    assert summary["n_completed"] == 5
+    assert sorted(eng.completed) == [1, 2, 3, 4, 5]
+    assert all(len(v) == 6 for v in eng.completed.values())
+    assert summary["max_concurrent"] >= 2           # actually batched
+    assert summary["ttft_steps_mean"] is not None
+    assert summary["kv_occupancy"] == 0.0           # fully drained
+
+
+def test_engine_reopt_under_serving_churn(tiny_model):
+    """A decode that outruns its profiled gen_len must overflow, replan at
+    the epoch boundary, and leave ArenaAllocator.stats()['n_reopt'] >= 1."""
+    cfg, model, params = tiny_model
+    trace = [Request(rid=i + 1, prompt_len=8, gen_len=4, arrival=2 * i)
+             for i in range(4)]
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
+                      max_batch=4, page_tokens=8)
+    summary = eng.run(_live(cfg, trace, gen_override={2: 24}))
+    assert summary["n_completed"] == 4
+    assert len(eng.completed[2]) == 24              # outgrew its profile...
+    assert eng.kv.arena.stats()["n_reopt"] >= 1     # ...and was replanned
+    assert eng.kv.stats()["n_reopt"] >= 1
+
+
+def test_engine_preemption_recovers(tiny_model):
+    """Concurrent growth past a tight pool preempts the youngest request,
+    which is re-admitted and still completes (greedy recompute)."""
+    cfg, model, params = tiny_model
+    # profile run says: short generations, little overlap -> tiny pool
+    trace = [Request(rid=1, prompt_len=8, gen_len=2, arrival=0),
+             Request(rid=2, prompt_len=8, gen_len=2, arrival=1),
+             Request(rid=3, prompt_len=8, gen_len=2, arrival=2)]
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
+                      max_batch=3, page_tokens=4)
+    summary = eng.run(_live(cfg, trace, gen_override={1: 20, 2: 20, 3: 20}),
+                      max_steps=2000)
+    assert summary["n_completed"] == 3
+    assert all(len(eng.completed[r]) == 20 for r in (1, 2, 3))
+    assert summary["n_preemptions"] >= 1
+    assert eng.kv.arena.stats()["n_reopt"] >= 1
+
+
+def test_engine_hbm_admission_cap(tiny_model):
+    cfg, model, params = tiny_model
+    trace = [Request(rid=i + 1, prompt_len=8, gen_len=4, arrival=0)
+             for i in range(6)]
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=32,
+                      max_batch=6, page_tokens=8,
+                      hbm_budget=2 * eng_probe_bytes(cfg, trace))
+    assert eng.sched.cap < 6                        # HBM gate bound admission
+    summary = eng.run(_live(cfg, trace))
+    assert summary["n_completed"] == 6
+    assert summary["max_concurrent"] <= eng.sched.cap
+
+
+def eng_probe_bytes(cfg, trace):
+    from repro.serving.pages import concurrency_bytes
+    return concurrency_bytes(cfg, trace, page_tokens=8, batch=1)
