@@ -5,6 +5,7 @@
   fig4    heuristic runtime + exact-vs-heuristic objective (paper Fig. 4/§5.2)
   sec53   seq2seq variable-length reoptimization           (paper §5.3)
   serve   beyond-paper: DSA on LLM serving KV traces
+  remat   beyond-paper: profile-guided rematerialization for training
   roofline (optional, needs results/dryrun)                (EXPERIMENTS §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV per line.
@@ -22,7 +23,7 @@ import traceback
 def _import_benches():
     try:
         from . import (bench_alloc_time, bench_heuristic, bench_memory,
-                       bench_reopt, bench_serving)
+                       bench_remat, bench_reopt, bench_serving)
     except ImportError:
         # script mode (`python benchmarks/run.py`): repo root + src on path,
         # then import the benchmarks namespace package absolutely
@@ -31,9 +32,10 @@ def _import_benches():
             if p not in sys.path:
                 sys.path.insert(0, p)
         from benchmarks import (bench_alloc_time, bench_heuristic,
-                                bench_memory, bench_reopt, bench_serving)
-    return (bench_alloc_time, bench_heuristic, bench_memory, bench_reopt,
-            bench_serving)
+                                bench_memory, bench_remat, bench_reopt,
+                                bench_serving)
+    return (bench_alloc_time, bench_heuristic, bench_memory, bench_remat,
+            bench_reopt, bench_serving)
 
 
 def main() -> None:
@@ -43,13 +45,14 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = args.quick or bool(int(os.environ.get("BENCH_QUICK", "0")))
     (bench_alloc_time, bench_heuristic, bench_memory,
-     bench_reopt, bench_serving) = _import_benches()
+     bench_remat, bench_reopt, bench_serving) = _import_benches()
     sections = [
         ("fig2", bench_memory.main),
         ("fig3", bench_alloc_time.main),
         ("fig4", bench_heuristic.main),
         ("sec53", bench_reopt.main),
         ("serve", bench_serving.main),
+        ("remat", bench_remat.main),
     ]
     failures = 0
     for name, fn in sections:

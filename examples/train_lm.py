@@ -1,15 +1,17 @@
 """End-to-end training driver example (assignment deliverable b).
 
 Trains a reduced LM (presets: tiny ~1 min, 20m, 100m) for a few hundred steps
-with checkpointing, fault injection + restart, and the memory planner's
-report.  Thin wrapper over the production launcher.
+with checkpointing, fault injection + restart, the memory planner's report,
+and the profile-guided remat policy (``--remat planned`` is the default;
+``none``/``full`` give the legacy boolean behaviours).  Thin wrapper over
+the production launcher.
 
-  # ~1 minute sanity run
+  # ~1 minute sanity run (plans + applies the remat policy)
   PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 30
 
   # the ~100M-parameter run (CPU: ~hours; the driver is identical on TPU)
   PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300 \
-      --ckpt-dir /tmp/ck --fail-at 150
+      --ckpt-dir /tmp/ck --fail-at 150 --remat planned --remat-target 0.5
 """
 import sys
 

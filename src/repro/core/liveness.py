@@ -42,6 +42,92 @@ def _aval_bytes(aval) -> int:
     return n * dtype.itemsize
 
 
+def _aval_elems(aval) -> int:
+    try:
+        n = 1
+        for d in aval.shape:
+            n *= int(d)
+        return n
+    except Exception:
+        return 0
+
+
+def _eqn_flops(eqn) -> float:
+    """Rough FLOP count for recomputing one equation's outputs.
+
+    dot_general gets the 2*out*K matmul count; reductions are charged their
+    input size; everything else one FLOP per output element.  This is a cost
+    *model*, not a profiler: relative magnitudes drive the remat knapsack.
+    """
+    name = eqn.primitive.name
+    out_elems = sum(_aval_elems(v.aval) for v in eqn.outvars
+                    if type(v).__name__ != "DropVar")
+    if name == "dot_general":
+        (lhs_c, _), _ = eqn.params["dimension_numbers"]
+        try:
+            lhs_shape = eqn.invars[0].aval.shape
+            k = 1
+            for d in lhs_c:
+                k *= int(lhs_shape[d])
+        except Exception:
+            k = 1
+        return 2.0 * out_elems * k
+    if name == "conv_general_dilated":
+        try:
+            rhs_shape = eqn.invars[1].aval.shape
+            k = 1
+            for d in rhs_shape[:-1]:
+                k *= int(d)
+        except Exception:
+            k = 1
+        return 2.0 * out_elems * k
+    if name.startswith("reduce_") or name in ("argmax", "argmin"):
+        return float(sum(_aval_elems(v.aval) for v in eqn.invars
+                         if not isinstance(v, jcore.Literal)))
+    return float(out_elems)
+
+
+def _scan_out_tags(eqn) -> dict[int, tuple[str, float, int]]:
+    """Per-outvar (tag, flops, steps) for a scan eqn's stacked ys outputs.
+
+    grad-of-scan stacks the forward residuals as ys; at the top level those
+    are the big long-lived blocks, but their tag would just read "scan".
+    Mapping ys[j] back to the inner equation that produced it yields
+    ``scan:<prim>`` tags (the handle the remat policy compiler keys on),
+    recompute FLOPs = inner-eqn FLOPs x scan length, and the length itself —
+    under remat only a 1/length slice of a stacked residual is ever live, so
+    the eviction search needs it to size the re-materialization stubs.
+    """
+    out: dict[int, tuple[str, float, int]] = {}
+    try:
+        inner = eqn.params["jaxpr"].jaxpr
+        num_carry = eqn.params["num_carry"]
+        length = int(eqn.params.get("length", 1))
+        produced = {}
+        for ie in inner.eqns:
+            for v in ie.outvars:
+                produced[v] = ie
+        for j, v in enumerate(inner.outvars):
+            if j < num_carry:
+                continue
+            ie = produced.get(v)
+            # jax.checkpoint-with-policy marks saved residuals with identity
+            # reduce_precision ops; see through them to the real producer so
+            # re-traced profiles stay policy-addressable.
+            hops = 0
+            while (ie is not None and ie.primitive.name == "reduce_precision"
+                   and ie.invars and hops < 4):
+                ie = produced.get(ie.invars[0])
+                hops += 1
+            if ie is None:     # pass-through of an invar/const
+                continue
+            out[j] = (f"scan:{ie.primitive.name}",
+                      _eqn_flops(ie) * float(length), length)
+    except Exception:
+        pass
+    return out
+
+
 def profile_jaxpr(jaxpr: jcore.ClosedJaxpr, *, alignment: int = DEFAULT_ALIGNMENT,
                   drop_aliases: bool = True) -> MemoryProfile:
     """Liveness analysis over a closed jaxpr's top-level equations."""
@@ -53,6 +139,8 @@ def profile_jaxpr(jaxpr: jcore.ClosedJaxpr, *, alignment: int = DEFAULT_ALIGNMEN
     produced_at: dict[Any, int] = {}
     sizes: dict[Any, int] = {}
     tags: dict[Any, str] = {}
+    flops: dict[Any, float] = {}
+    steps: dict[Any, int] = {}
 
     retained = 0
     retained_vars = set()
@@ -60,17 +148,31 @@ def profile_jaxpr(jaxpr: jcore.ClosedJaxpr, *, alignment: int = DEFAULT_ALIGNMEN
         retained += _aval_bytes(v.aval)
         retained_vars.add(v)
 
+    producer: dict[Any, Any] = {}
     for t, eqn in enumerate(eqns):
         for v in eqn.invars:
             if isinstance(v, jcore.Literal):
                 continue
             last_use[v] = t
-        for v in eqn.outvars:
+        # See through checkpoint save-markers (identity reduce_precision) to
+        # the real producer, so tags stay policy-addressable when profiling a
+        # step that already runs under a jax.checkpoint policy.
+        src, hops = eqn, 0
+        while (src.primitive.name == "reduce_precision" and src.invars
+               and not isinstance(src.invars[0], jcore.Literal)
+               and src.invars[0] in producer and hops < 4):
+            src = producer[src.invars[0]]
+            hops += 1
+        eqn_cost = _eqn_flops(src)
+        scan_tags = _scan_out_tags(eqn) if eqn.primitive.name == "scan" else {}
+        for j, v in enumerate(eqn.outvars):
             if type(v).__name__ == "DropVar":
                 continue
+            producer[v] = eqn
             produced_at[v] = t
             sizes[v] = _aval_bytes(v.aval)
-            tags[v] = eqn.primitive.name
+            tags[v], flops[v], steps[v] = scan_tags.get(
+                j, (src.primitive.name, eqn_cost, 1))
     # Outputs of the jaxpr live to the very end.
     for v in jx.outvars:
         if isinstance(v, jcore.Literal) or v in retained_vars:
@@ -78,6 +180,8 @@ def profile_jaxpr(jaxpr: jcore.ClosedJaxpr, *, alignment: int = DEFAULT_ALIGNMEN
         last_use[v] = n_eqns
 
     blocks: list[Block] = []
+    block_flops: dict[int, float] = {}
+    block_steps: dict[int, int] = {}
     bid = 1
     for v, t_prod in produced_at.items():
         size = sizes[v]
@@ -92,13 +196,17 @@ def profile_jaxpr(jaxpr: jcore.ClosedJaxpr, *, alignment: int = DEFAULT_ALIGNMEN
         end = 2 * t_last + 1
         blocks.append(Block(bid=bid, size=align(size, alignment), start=start,
                             end=end, tag=tags[v]))
+        block_flops[bid] = flops[v]
+        if steps[v] > 1:
+            block_steps[bid] = steps[v]
         bid += 1
 
     return MemoryProfile(
         blocks=blocks,
         retained_bytes=retained,
         clock_end=2 * n_eqns + 1,
-        meta={"n_eqns": n_eqns, "source": "jaxpr"},
+        meta={"n_eqns": n_eqns, "source": "jaxpr", "block_flops": block_flops,
+              "block_steps": block_steps},
     )
 
 

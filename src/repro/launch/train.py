@@ -74,6 +74,12 @@ def main() -> None:
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject a simulated host failure at this step")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="planned",
+                    choices=["none", "full", "planned"],
+                    help="activation policy: keep all / recompute all / "
+                         "profile-guided eviction selection")
+    ap.add_argument("--remat-target", type=float, default=0.5,
+                    help="planned mode: target packed-peak ratio vs no-remat")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -83,16 +89,9 @@ def main() -> None:
     model = Transformer(cfg, RunOpts())
     acfg = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
                        total_steps=args.steps)
-    topts = train_lib.TrainOpts(microbatches=args.microbatches,
-                                compress_grads=args.compress_grads,
-                                donate=False)
-    key = jax.random.PRNGKey(args.seed)
-    state = train_lib.init_state(model, key, acfg, topts)
-    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
-    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M seq={seq} "
-          f"batch={batch} steps={args.steps}")
 
-    # paper's planner: activation plan for this exact step
+    # paper's planner: activation plan for this exact step, and the
+    # profile-guided remat policy that replaces the boolean flag
     batch_sds = {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
     if cfg.is_encoder_decoder:
         batch_sds["frames"] = jax.ShapeDtypeStruct(
@@ -104,6 +103,26 @@ def main() -> None:
           f"pool={rep.baselines['pool_peak'] / 1e6:.1f}MB "
           f"saving={100 * rep.baselines['saving_vs_pool']:.1f}% "
           f"retained={prof.retained_bytes / 1e6:.1f}MB")
+
+    if args.remat == "planned":
+        remat, ev = train_lib.plan_remat_policy(model, batch_sds,
+                                                target_ratio=args.remat_target)
+        s = ev.summary()
+        print(f"remat plan: {remat.describe()} evicted={s['n_evicted']} "
+              f"peak {s['baseline_peak'] / 1e6:.1f}->{s['peak'] / 1e6:.1f}MB "
+              f"(-{100 * s['saving']:.1f}%) overhead={s['overhead_s'] * 1e3:.3f}ms")
+    else:
+        remat = args.remat == "full"
+
+    topts = train_lib.TrainOpts(microbatches=args.microbatches,
+                                remat=remat,
+                                compress_grads=args.compress_grads,
+                                donate=False)
+    key = jax.random.PRNGKey(args.seed)
+    state = train_lib.init_state(model, key, acfg, topts)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M seq={seq} "
+          f"batch={batch} steps={args.steps}")
 
     step_fn, _ = train_lib.build_train_step(model, None, acfg, topts)
     pipe = SyntheticPipeline(DataConfig(

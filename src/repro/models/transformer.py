@@ -300,7 +300,12 @@ class Transformer:
 
     def _run_stack(self, params, x, rope_cs, *, training, enc_out=None,
                    remat=False):
-        """Scan over pattern groups; returns (x, aux_loss_sum)."""
+        """Scan over pattern groups; returns (x, aux_loss_sum).
+
+        ``remat`` accepts the legacy bool or a ``repro.remat.RematPolicy``:
+        True/``full`` checkpoints every group output, a planned policy
+        recomputes only the primitives the eviction search selected.
+        """
         cfg = self.cfg
         pattern = cfg.block_pattern
 
@@ -312,9 +317,8 @@ class Transformer:
                 aux = aux + co.get("aux", 0.0)
             return (x, aux), None
 
-        body = group_body
-        if remat:
-            body = jax.checkpoint(group_body, prevent_cse=False)
+        from ..remat.policy import RematPolicy
+        body = RematPolicy.coerce(remat).wrap(group_body)
         aux0 = jnp.zeros((), jnp.float32)
         if cfg.block_pattern:
             (x, aux), _ = jax.lax.scan(body, (x, aux0), params["pattern"])

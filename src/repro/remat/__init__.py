@@ -1,0 +1,31 @@
+"""repro.remat — profile-guided rematerialization & host-offload planning.
+
+The training pillar of the reproduction: the same jaxpr liveness profile the
+DSA planner packs is used to *decide per-tensor* whether to keep, recompute,
+or offload an activation, turning the paper's "larger mini-batches" claim
+into an automated planning service.
+
+  - cost_model: per-block HBM area vs recompute-FLOPs / host-link time
+  - search:     greedy area-per-cost knapsack with best-fit replanning
+                (target-peak and exhaustive modes)
+  - policy:     RematPolicy — compiles a selection into a jax.checkpoint
+                policy; drop-in replacement for the old boolean remat flag
+  - offload:    host staging arena instrumented with MemoryRecorder
+
+Typical flow (see also ``runtime.train_lib.plan_remat_policy``):
+
+    prof = profile_fn(jax.grad(loss), params, batch)        # no remat
+    ev   = plan_evictions(prof, target_ratio=0.5)           # pick evictions
+    policy = RematPolicy.from_eviction(ev)                  # compile
+    loss(params, batch, remat=policy)                       # apply
+"""
+from .cost_model import HOST_LINK_BW, PEAK_FLOPS, BlockCost, CostModel, block_cost
+from .offload import HostOffloadArena
+from .policy import RematPolicy
+from .search import Eviction, EvictionPlan, evict_block, plan_evictions
+
+__all__ = [
+    "BlockCost", "CostModel", "Eviction", "EvictionPlan", "HOST_LINK_BW",
+    "HostOffloadArena", "PEAK_FLOPS", "RematPolicy", "block_cost",
+    "evict_block", "plan_evictions",
+]

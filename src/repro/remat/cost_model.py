@@ -1,0 +1,116 @@
+"""Per-block eviction cost model (the remat analogue of the paper's §3.1).
+
+In the planner's 2-D packing view every activation is a rectangle of
+HBM *area* = bytes x lifetime.  Evicting it (recompute it in the backward
+pass, or stage it to host) removes most of that area from the packing at a
+time cost:
+
+  * recompute  — FLOPs of the producing equation(s) / peak FLOPs.  The
+    liveness profiler records per-block FLOPs (scan residuals are charged
+    inner-eqn FLOPs x scan length) in ``profile.meta["block_flops"]``.
+  * offload    — 2 x bytes / host-link bandwidth (stage out + stage back).
+
+The knapsack in ``search.py`` spends a time budget to buy packing area;
+this module prices the candidates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.events import Block, MemoryProfile
+from ..core.planner import PEAK_FLOPS_BF16 as PEAK_FLOPS  # one hardware model
+
+HOST_LINK_BW = 50e9          # bytes/s, device<->host staging (PCIe-class)
+
+# Cheap-to-recompute elementwise ops get a flat FLOP floor so division by
+# near-zero costs doesn't dominate the benefit ranking.
+_MIN_FLOPS = 1.0
+
+
+@dataclass(frozen=True)
+class BlockCost:
+    """Eviction economics of one profiled block."""
+
+    bid: int
+    size: int                # bytes
+    lifetime: int            # event-clock ticks
+    hbm_area: int            # size x lifetime — what eviction buys back
+    recompute_flops: float
+    recompute_s: float
+    offload_s: float
+    tag: str
+
+    @property
+    def mode(self) -> str:
+        """Cheaper of the two eviction mechanisms for this block."""
+        return "recompute" if self.recompute_s <= self.offload_s else "offload"
+
+    @property
+    def cost_s(self) -> float:
+        return min(self.recompute_s, self.offload_s)
+
+    @property
+    def benefit(self) -> float:
+        """Packing area bought per second of overhead (knapsack key)."""
+        return self.hbm_area / max(self.cost_s, 1e-12)
+
+
+class CostModel:
+    """Prices every block of a profile for the eviction search."""
+
+    def __init__(self, costs: dict[int, BlockCost], *,
+                 peak_flops: float = PEAK_FLOPS,
+                 host_bw: float = HOST_LINK_BW):
+        self.costs = costs
+        self.peak_flops = peak_flops
+        self.host_bw = host_bw
+
+    @classmethod
+    def from_profile(cls, profile: MemoryProfile, *,
+                     peak_flops: float = PEAK_FLOPS,
+                     host_bw: float = HOST_LINK_BW) -> "CostModel":
+        block_flops = profile.meta.get("block_flops", {})
+        costs: dict[int, BlockCost] = {}
+        for b in profile.blocks:
+            if b.size == 0:
+                continue
+            # meta may have round-tripped through JSON (str keys)
+            fl = block_flops.get(b.bid, block_flops.get(str(b.bid), 0.0))
+            fl = max(float(fl), _MIN_FLOPS)
+            costs[b.bid] = BlockCost(
+                bid=b.bid, size=b.size, lifetime=b.lifetime,
+                hbm_area=b.size * b.lifetime,
+                recompute_flops=fl,
+                recompute_s=fl / peak_flops,
+                offload_s=2.0 * b.size / host_bw,
+                tag=b.tag,
+            )
+        return cls(costs, peak_flops=peak_flops, host_bw=host_bw)
+
+    def __getitem__(self, bid: int) -> BlockCost:
+        return self.costs[bid]
+
+    def __contains__(self, bid: int) -> bool:
+        return bid in self.costs
+
+    def candidates(self, *, min_bytes: int = 0,
+                   min_lifetime: int = 0) -> list[BlockCost]:
+        """Blocks worth considering, best benefit-per-cost first."""
+        out = [c for c in self.costs.values()
+               if c.size >= min_bytes and c.lifetime >= min_lifetime]
+        out.sort(key=lambda c: c.benefit, reverse=True)
+        return out
+
+    def total_overhead_s(self, bids) -> float:
+        return sum(self.costs[b].cost_s for b in bids if b in self.costs)
+
+
+def block_cost(b: Block, flops: float = 0.0, *,
+               peak_flops: float = PEAK_FLOPS,
+               host_bw: float = HOST_LINK_BW) -> BlockCost:
+    """Price a single block directly (test/bench helper)."""
+    fl = max(float(flops), _MIN_FLOPS)
+    return BlockCost(bid=b.bid, size=b.size, lifetime=b.lifetime,
+                     hbm_area=b.size * b.lifetime, recompute_flops=fl,
+                     recompute_s=fl / peak_flops,
+                     offload_s=2.0 * b.size / host_bw, tag=b.tag)

@@ -1,0 +1,120 @@
+"""RematPolicy — the profile-guided replacement for the boolean remat flag.
+
+``TrainOpts.remat`` used to be a bool: checkpoint everything or nothing.
+A ``RematPolicy`` carries the *selection* the eviction search made and
+compiles it into a ``jax.checkpoint`` policy: outputs of the selected
+primitives are recomputed in the backward pass, everything else is saved.
+
+The mapping uses the liveness profiler's tags: a grad-of-scan residual block
+is tagged ``scan:<inner-prim>``, and the checkpoint wraps the scan *body*,
+where the policy callback sees exactly those inner primitives.  Offload-mode
+evictions are folded into the recompute set for the in-jit policy (XLA-level
+host offload needs named checkpoints); the actual host-staging mechanism
+lives in ``offload.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Optional
+
+import jax
+
+if TYPE_CHECKING:                     # pragma: no cover - typing only
+    from .search import EvictionPlan
+
+# Control-flow / wrapper primitives: never meaningful in a recompute set
+# (the policy callback only ever sees the ops *inside* the checkpointed body).
+# reduce_precision is the checkpoint machinery's own save-marker — evicting
+# "it" must target the marked residual's producer, never the marker.
+_NON_RECOMPUTABLE = {"scan", "while", "cond", "pjit", "remat", "custom_vjp_call",
+                     "custom_jvp_call", "reduce_precision"}
+
+
+def _prim_of_tag(tag: str) -> Optional[str]:
+    """Profiler tag -> primitive name the checkpoint policy can match on."""
+    name = tag.split(":", 1)[1] if tag.startswith("scan:") else tag
+    if not name or ":" in name or name in _NON_RECOMPUTABLE:
+        return None
+    return name
+
+
+@dataclass(frozen=True)
+class RematPolicy:
+    """What to do with activations in the loss path.
+
+    mode:
+      * "none"   — save everything (the old ``remat=False``)
+      * "full"   — recompute everything (the old ``remat=True``)
+      * "policy" — recompute only outputs of ``recompute_prims``
+    """
+
+    mode: str = "none"
+    recompute_prims: frozenset = field(default_factory=frozenset)
+    offload_prims: frozenset = field(default_factory=frozenset)
+
+    def __post_init__(self):
+        if self.mode not in ("none", "full", "policy"):
+            raise ValueError(f"unknown remat mode {self.mode!r}")
+
+    # ---- constructors -------------------------------------------------------
+    @classmethod
+    def none(cls) -> "RematPolicy":
+        return cls(mode="none")
+
+    @classmethod
+    def full(cls) -> "RematPolicy":
+        return cls(mode="full")
+
+    @classmethod
+    def coerce(cls, value) -> "RematPolicy":
+        """Accept the legacy bool (and None) alongside real policies."""
+        if isinstance(value, cls):
+            return value
+        if value is None or value is False:
+            return cls.none()
+        if value is True:
+            return cls.full()
+        raise TypeError(f"cannot interpret {value!r} as a RematPolicy")
+
+    @classmethod
+    def from_eviction(cls, ev: "EvictionPlan") -> "RematPolicy":
+        """Compile the search's selection into a primitive-level policy."""
+        recompute, offload = set(), set()
+        for e in ev.evictions:
+            prim = _prim_of_tag(e.tag)
+            if prim is None:
+                continue
+            (offload if e.mode == "offload" else recompute).add(prim)
+        if not (recompute or offload):
+            return cls.none()
+        return cls(mode="policy", recompute_prims=frozenset(recompute),
+                   offload_prims=frozenset(offload))
+
+    # ---- application --------------------------------------------------------
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    def checkpoint_policy(self):
+        """None = checkpoint's own full-remat; else a saveable-predicate."""
+        if self.mode != "policy":
+            return None
+        evict = self.recompute_prims | self.offload_prims
+
+        def saveable(prim, *_, **__):
+            return getattr(prim, "name", str(prim)) not in evict
+
+        return saveable
+
+    def wrap(self, fn, *, prevent_cse: bool = False):
+        """Apply ``jax.checkpoint`` to ``fn`` per this policy (no-op if none)."""
+        if not self.enabled:
+            return fn
+        return jax.checkpoint(fn, prevent_cse=prevent_cse,
+                              policy=self.checkpoint_policy())
+
+    def describe(self) -> str:
+        if self.mode == "policy":
+            return (f"planned(recompute={sorted(self.recompute_prims)}, "
+                    f"offload={sorted(self.offload_prims)})")
+        return self.mode

@@ -206,6 +206,12 @@ class ServingArena:
 
 def __getattr__(name: str):
     if name == "ServeEngine":
+        import warnings
+
+        warnings.warn(
+            "repro.runtime.serve_lib.ServeEngine moved to "
+            "repro.serving.ServeEngine; this compat shim will be removed",
+            DeprecationWarning, stacklevel=2)
         from ..serving.engine import ServeEngine
         return ServeEngine
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -22,9 +22,18 @@ from . import mesh_ctx, sharding_rules
 @dataclass(frozen=True)
 class TrainOpts:
     microbatches: int = 1
-    remat: bool = True
+    # bool (legacy: True = full remat) or a repro.remat.RematPolicy.
+    remat: Any = True
     compress_grads: bool = False
     donate: bool = True
+
+    def __post_init__(self):
+        self.remat_policy       # fail fast on values coerce() rejects
+
+    @property
+    def remat_policy(self):
+        from ..remat.policy import RematPolicy
+        return RematPolicy.coerce(self.remat)
 
 
 def init_state(model: Transformer, key, adamw_cfg: adamw.AdamWConfig,
@@ -65,6 +74,93 @@ def state_shardings(model: Transformer, mesh: Mesh,
     if opts.compress_grads:
         state["err"] = pspecs
     return state
+
+
+def plan_remat_policy(model: Transformer, batch_sds: dict, *,
+                      target_ratio: float = 0.5,
+                      target_peak: Optional[int] = None,
+                      planner=None, max_rounds: int = 3,
+                      profile=None):
+    """Profile the no-remat grad step, search evictions, compile the policy.
+
+    Returns ``(RematPolicy, EvictionPlan)`` — the profile-guided replacement
+    for ``TrainOpts(remat=True)``.  Profiles are taken over ``grad(loss)``
+    on abstract params/batch, so nothing is allocated; pass ``profile`` to
+    reuse an already-computed no-remat profile.
+
+    The compile is closed-loop: a primitive-level policy can miss the target
+    the block-level search hit (residuals of unselected primitives survive),
+    so the step is re-traced under the compiled policy and, while the packed
+    peak still misses the target, the search re-runs on the *actual* trace
+    and its selection is unioned in — up to ``max_rounds`` refinements.
+    The returned plan aggregates every round's evictions, and its
+    ``baseline_peak``/``peak`` are the no-remat baseline and the peak of the
+    final policy's verified trace — not intermediate search estimates.
+    """
+    from ..core import MemoryPlanner, profile_fn
+    from ..remat import EvictionPlan, RematPolicy
+    from ..remat.policy import _prim_of_tag
+
+    planner = planner or MemoryPlanner()
+
+    def prof_with(remat):
+        return profile_fn(
+            jax.grad(lambda p, b: model.loss_fn(p, b, remat=remat)[0]),
+            model.abstract(), batch_sds)
+
+    # Only select blocks a checkpoint policy can actually address, so every
+    # accepted eviction compiles and the reported savings are deliverable.
+    def expressible(c):
+        return _prim_of_tag(c.tag) is not None
+
+    # Delivery is a jax.checkpoint policy, so price everything at recompute
+    # cost (offload-mode selections compile into the recompute set too).
+    prof = profile if profile is not None else prof_with(False)
+    ev0 = planner.plan_with_remat(prof, target_peak=target_peak,
+                                  target_ratio=None if target_peak else target_ratio,
+                                  candidate_filter=expressible,
+                                  price_mode="recompute")
+    target = ev0.target_peak
+    policy = RematPolicy.from_eviction(ev0)
+    evictions = list(ev0.evictions)
+    achieved, final_plan, final_profile = ev0.peak, ev0.plan, ev0.profile
+    rounds = 0
+    if policy.enabled:
+        while True:
+            traced = prof_with(policy)
+            final_plan = planner.plan(traced)
+            achieved, final_profile = final_plan.peak, traced
+            if target is None or achieved <= target or rounds >= max_rounds:
+                break
+            rounds += 1
+            ev_i = planner.plan_with_remat(traced, target_peak=target,
+                                           candidate_filter=expressible,
+                                           price_mode="recompute")
+            refined = RematPolicy.from_eviction(ev_i)
+            merged = RematPolicy(
+                mode="policy",
+                recompute_prims=policy.recompute_prims | refined.recompute_prims,
+                offload_prims=policy.offload_prims | refined.offload_prims)
+            if merged == policy:      # fixed point: nothing new to evict
+                break
+            covered = policy.recompute_prims | policy.offload_prims
+            policy = merged
+            # aggregate only genuinely new selections: blocks of prims the
+            # pre-merge policy already evicted would double-count
+            evictions.extend(e for e in ev_i.evictions
+                             if _prim_of_tag(e.tag) not in covered)
+    ev = EvictionPlan(
+        evictions=evictions,
+        baseline_peak=ev0.baseline_peak,
+        peak=achieved,
+        overhead_s=sum(e.cost_s for e in evictions),
+        target_peak=target,
+        plan=final_plan,
+        profile=final_profile,
+        meta={"rounds": rounds, "verified": policy.enabled,
+              "policy": policy.describe()},
+    )
+    return policy, ev
 
 
 def _split_microbatches(batch: dict, n: int) -> dict:

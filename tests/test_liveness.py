@@ -65,3 +65,37 @@ def test_shape_structs_work_without_allocation():
 
     prof = profile_fn(f, jax.ShapeDtypeStruct((1 << 14, 1 << 12), jnp.bfloat16))
     assert prof.total_bytes >= (1 << 14) * (1 << 12) * 2
+
+
+def test_metadata_only_graph_drops_to_empty_profile():
+    def f(x):
+        return x.reshape(64, 64).reshape(16, 256).squeeze()
+
+    x = jnp.ones((4096,))
+    prof = profile_fn(f, x, drop_aliases=True)
+    assert prof.n == 0                       # nothing left to pack
+    assert prof.total_bytes == 0
+    assert prof.retained_bytes == 4096 * 4   # input still accounted
+    plan = MemoryPlanner().plan(prof)        # planning stays well-defined
+    assert plan.peak == 0
+    # without dropping, the alias chain shows up as real blocks
+    kept = profile_fn(f, x, drop_aliases=False)
+    assert kept.n >= 2
+
+
+def test_scan_residual_tags_and_flops_metadata():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), jnp.tanh(c @ w)
+        c, ys = jax.lax.scan(body, x, None, length=4)
+        return c.sum() + ys.sum()
+
+    prof = profile_fn(jax.grad(f), jnp.ones((8, 8)), jnp.ones((8, 8)))
+    scan_blocks = [b for b in prof.blocks if b.tag.startswith("scan:")]
+    assert scan_blocks, "stacked residuals should carry inner-primitive tags"
+    flops = prof.meta["block_flops"]
+    assert all(flops[b.bid] > 0 for b in scan_blocks)
+    # dot residuals are charged 2*M*N*K x scan length
+    dots = [b for b in scan_blocks if b.tag == "scan:dot_general"]
+    if dots:
+        assert flops[dots[0].bid] >= 2 * 8 * 8 * 8 * 4

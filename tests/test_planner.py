@@ -47,6 +47,70 @@ def test_max_feasible_batch_monotone():
     assert mp.max_feasible_batch(lambda b: HBM_BYTES * 2, HBM_BYTES) == 0
 
 
+def test_max_feasible_batch_monotone_in_budget():
+    per_sample = 64 << 20
+    bytes_at = lambda b: b * per_sample
+    mp = MemoryPlanner()
+    budgets = [1 << 30, 2 << 30, 4 << 30, 8 << 30]
+    batches = [mp.max_feasible_batch(bytes_at, hbm_budget=h) for h in budgets]
+    assert batches == sorted(batches)
+    assert batches[-1] == 2 * batches[-2] == 4 * batches[-3]
+
+
+def _profile_at_batch(b):
+    """Synthetic training profile: activations scale with batch, one fat
+    long-lived residual the eviction search can profitably stub out."""
+    per = 8 << 20
+    spec = [(b * per, 0, 100)]
+    spec += [(per, t, t + 4) for t in range(1, 93, 4)]
+    prof = make_profile(spec)
+    prof.retained_bytes = 32 << 20
+    return prof
+
+
+def test_max_feasible_batch_planned_consistent_with_and_without_remat():
+    mp = MemoryPlanner()
+    budget = 128 << 20
+    plain = mp.max_feasible_batch_planned(_profile_at_batch, budget, hi=64)
+    for remat in (True, object()):   # bool and policy-like both enable
+        planned = mp.max_feasible_batch_planned(_profile_at_batch, budget,
+                                                hi=64, remat=remat)
+        assert planned >= plain
+    # remat=False / mode="none" must match the plain path exactly
+    class _NonePolicy:
+        mode = "none"
+    assert mp.max_feasible_batch_planned(_profile_at_batch, budget, hi=64,
+                                         remat=False) == plain
+    assert mp.max_feasible_batch_planned(_profile_at_batch, budget, hi=64,
+                                         remat=_NonePolicy()) == plain
+    # eviction actually buys batch here: the fat block dominates the packing
+    assert mp.max_feasible_batch_planned(_profile_at_batch, budget, hi=64,
+                                         remat=True) > plain
+
+
+def test_max_feasible_batch_planned_respects_policy_constraints():
+    # a compiled policy constrains eviction to its own primitive sets; the
+    # synthetic blocks are untagged, so nothing is evictable under it
+    class _Pol:
+        mode = "policy"
+        recompute_prims = frozenset({"dot_general"})
+        offload_prims = frozenset()
+
+    mp = MemoryPlanner()
+    budget = 128 << 20
+    plain = mp.max_feasible_batch_planned(_profile_at_batch, budget, hi=64)
+    constrained = mp.max_feasible_batch_planned(_profile_at_batch, budget,
+                                                hi=64, remat=_Pol())
+    assert constrained == plain
+
+
+def test_plan_with_remat_reports_baseline_and_target():
+    mp = MemoryPlanner()
+    ev = mp.plan_with_remat(_profile_at_batch(4), target_ratio=0.8)
+    assert ev.peak <= ev.baseline_peak
+    assert ev.target_peak == int(ev.baseline_peak * 0.8)
+
+
 def test_lp_export_structure():
     prof = make_profile([(512, 0, 3), (1024, 1, 4), (512, 5, 7)])
     lp = to_lp(prof, max_memory=1 << 20)

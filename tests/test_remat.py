@@ -1,0 +1,263 @@
+"""repro.remat: cost model, eviction search, policy compile, offload arena."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MemoryPlanner, make_profile, profile_fn
+from repro.remat import (CostModel, HostOffloadArena, RematPolicy, block_cost,
+                         evict_block, plan_evictions)
+from repro.remat.search import Eviction, EvictionPlan
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_prices_dot_flops():
+    def f(x, w):
+        h = jnp.tanh(x @ w)
+        return (h @ w).sum()
+
+    prof = profile_fn(f, jnp.ones((64, 64)), jnp.ones((64, 64)))
+    cm = CostModel.from_profile(prof)
+    dots = [c for c in cm.costs.values() if c.tag == "dot_general"]
+    assert dots
+    # 2*M*N*K matmul count, and area = bytes x lifetime
+    assert dots[0].recompute_flops == pytest.approx(2 * 64 * 64 * 64)
+    for c in cm.costs.values():
+        assert c.hbm_area == c.size * c.lifetime
+
+
+def test_mode_picks_cheaper_mechanism():
+    from repro.core import Block
+
+    # tiny flops, big bytes -> recompute; huge flops, small bytes -> offload
+    cheap = block_cost(Block(bid=1, size=1 << 20, start=0, end=10), flops=10.0)
+    assert cheap.mode == "recompute"
+    heavy = block_cost(Block(bid=2, size=4096, start=0, end=10), flops=1e12)
+    assert heavy.mode == "offload"
+    assert heavy.cost_s == heavy.offload_s
+
+
+def test_scan_residuals_get_inner_tags_and_steps():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), jnp.tanh(c @ w)
+        c, ys = jax.lax.scan(body, x, None, length=8)
+        return c.sum() + ys.sum()
+
+    prof = profile_fn(jax.grad(f), jnp.ones((16, 16)), jnp.ones((16, 16)))
+    tags = {b.tag for b in prof.blocks}
+    assert any(t.startswith("scan:") for t in tags)
+    steps = prof.meta["block_steps"]
+    assert steps and all(s == 8 for s in steps.values())
+
+
+# ---------------------------------------------------------------------------
+# eviction search
+# ---------------------------------------------------------------------------
+
+
+def _skyline_profile():
+    # one long-lived fat block under a churn of short ones; the churn clears
+    # the fat block's endpoint ticks so eviction stubs don't stack on it
+    spec = [(1 << 20, 0, 100)]
+    spec += [(256 << 10, t, t + 4) for t in range(1, 93, 4)]
+    return make_profile(spec)
+
+
+def test_eviction_reduces_peak():
+    prof = _skyline_profile()
+    ev = plan_evictions(prof)
+    assert ev.baseline_peak > ev.peak
+    assert ev.evictions
+    assert ev.overhead_s > 0
+    # the long-lived block is the obvious candidate
+    assert 0 in ev.evicted_bids or ev.peak <= ev.baseline_peak - (1 << 20) // 2
+
+
+def test_target_peak_mode_stops_early():
+    prof = _skyline_profile()
+    target = int(plan_evictions(prof).baseline_peak * 0.9)
+    ev = plan_evictions(prof, target_peak=target)
+    assert ev.reached_target
+    assert ev.peak <= target
+    # exhaustive mode keeps buying reductions past the shallow target
+    assert len(plan_evictions(prof).evictions) >= len(ev.evictions)
+
+
+def test_evictions_only_kept_when_peak_drops():
+    # two identical fully-overlapping blocks: evicting either leaves its
+    # stubs under the survivor, so the replanned peak never drops and the
+    # greedy search must roll both candidates back
+    prof = make_profile([(1 << 20, 0, 50), (1 << 20, 0, 50)])
+    ev = plan_evictions(prof)
+    assert ev.evictions == []
+    assert ev.peak == ev.baseline_peak == ev.plan.peak
+
+
+def test_evict_block_stubs():
+    from repro.core import Block
+
+    b = Block(bid=7, size=4096, start=0, end=20)
+    head, tail = evict_block(b, next_bid=99)
+    assert head.bid == 7 and tail.bid == 99
+    assert head.lifetime == tail.lifetime == 1
+    # scan-stacked residual: stubs shrink to the per-step slice
+    head8, _ = evict_block(b, next_bid=99, steps=8)
+    assert head8.size == 4096 // 8
+    assert evict_block(Block(bid=1, size=64, start=0, end=2), 99) == []
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+
+def test_policy_coerce_back_compat():
+    assert RematPolicy.coerce(True).mode == "full"
+    assert RematPolicy.coerce(False).mode == "none"
+    assert RematPolicy.coerce(None).mode == "none"
+    p = RematPolicy(mode="policy", recompute_prims=frozenset({"mul"}))
+    assert RematPolicy.coerce(p) is p
+    with pytest.raises(TypeError):
+        RematPolicy.coerce(3.14)
+    with pytest.raises(ValueError):
+        RematPolicy(mode="sometimes")
+
+
+def test_policy_from_eviction_strips_scan_tags():
+    evs = [Eviction(bid=1, mode="recompute", saved_area=1, cost_s=1e-9,
+                    tag="scan:dot_general"),
+           Eviction(bid=2, mode="offload", saved_area=1, cost_s=1e-9,
+                    tag="exp"),
+           Eviction(bid=3, mode="recompute", saved_area=1, cost_s=1e-9,
+                    tag="scan")]      # carry output: not policy-addressable
+    plan = EvictionPlan(evictions=evs, baseline_peak=2, peak=1, overhead_s=0,
+                        target_peak=None, plan=None, profile=None)
+    pol = RematPolicy.from_eviction(plan)
+    assert pol.mode == "policy"
+    assert pol.recompute_prims == frozenset({"dot_general"})
+    assert pol.offload_prims == frozenset({"exp"})
+    saveable = pol.checkpoint_policy()
+    assert not saveable(jax.lax.exp_p)
+    assert saveable(jax.lax.add_p)
+
+
+def test_policy_wrap_matches_reference_gradient():
+    def f(x):
+        return jnp.tanh(x * 2.0).sum()
+
+    pol = RematPolicy(mode="policy", recompute_prims=frozenset({"mul"}))
+    g_ref = jax.grad(f)(jnp.ones((8,)))
+    g_pol = jax.grad(lambda x: pol.wrap(f)(x))(jnp.ones((8,)))
+    np.testing.assert_allclose(g_ref, g_pol, rtol=1e-6)
+    assert RematPolicy.none().wrap(f) is f
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on the transformer training path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def deep_model():
+    from repro.configs import get_config
+    from repro.models import Transformer
+
+    cfg = get_config("qwen2-0.5b").smoke().with_overrides(
+        name="qwen2-remat-test", n_layers=8)
+    return cfg, Transformer(cfg)
+
+
+def test_planned_policy_cuts_profiled_peak(deep_model):
+    cfg, model = deep_model
+    bsds = {"tokens": jax.ShapeDtypeStruct((2, 65), jnp.int32)}
+    mp = MemoryPlanner()
+
+    def grad_fn(remat):
+        return jax.grad(lambda p, b: model.loss_fn(p, b, remat=remat)[0])
+
+    prof_none = profile_fn(grad_fn(False), model.abstract(), bsds)
+    ev = mp.plan_with_remat(prof_none, target_ratio=0.5)
+    pol = RematPolicy.from_eviction(ev)
+    assert pol.enabled
+    assert ev.peak < ev.baseline_peak
+
+    prof_planned = profile_fn(grad_fn(pol), model.abstract(), bsds)
+    assert mp.plan(prof_planned).peak < mp.plan(prof_none).peak
+
+
+def test_train_opts_accepts_bool_and_policy(deep_model):
+    from repro.runtime import train_lib
+
+    _, model = deep_model
+    opts_true = train_lib.TrainOpts(remat=True)
+    opts_false = train_lib.TrainOpts(remat=False)
+    assert opts_true.remat_policy.mode == "full"
+    assert opts_false.remat_policy.mode == "none"
+    pol = RematPolicy(mode="policy", recompute_prims=frozenset({"dot_general"}))
+    assert train_lib.TrainOpts(remat=pol).remat_policy is pol
+
+
+def test_train_step_builds_and_runs_for_all_remat_kinds(rng_key):
+    from repro.configs import get_config
+    from repro.models import Transformer
+    from repro.optim.adamw import AdamWConfig
+    from repro.runtime import train_lib
+
+    cfg = get_config("qwen2-0.5b").smoke()
+    model = Transformer(cfg)
+    acfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    batch = {"tokens": jax.random.randint(rng_key, (2, 17), 0, cfg.vocab_size)}
+    pol = RematPolicy(mode="policy",
+                      recompute_prims=frozenset({"dot_general", "mul"}))
+    losses = {}
+    for name, remat in [("off", False), ("full", True), ("planned", pol)]:
+        opts = train_lib.TrainOpts(remat=remat, donate=False)
+        state = train_lib.init_state(model, rng_key, acfg, opts)
+        step, _ = train_lib.build_train_step(model, None, acfg, opts)
+        state, m = step(state, batch)
+        losses[name] = float(m["loss"])
+        assert np.isfinite(losses[name])
+    # remat changes scheduling, not math
+    assert losses["off"] == pytest.approx(losses["full"], rel=1e-4)
+    assert losses["off"] == pytest.approx(losses["planned"], rel=1e-4)
+
+
+def test_plan_remat_policy_helper(deep_model):
+    from repro.runtime import train_lib
+
+    _, model = deep_model
+    bsds = {"tokens": jax.ShapeDtypeStruct((2, 65), jnp.int32)}
+    pol, ev = train_lib.plan_remat_policy(model, bsds, target_ratio=0.5)
+    assert pol.mode == "policy"
+    assert ev.reached_target
+
+
+# ---------------------------------------------------------------------------
+# host offload arena
+# ---------------------------------------------------------------------------
+
+
+def test_offload_roundtrip_and_instrumentation():
+    arena = HostOffloadArena()
+    x = jnp.arange(1024, dtype=jnp.float32).reshape(32, 32)
+    arena.stage_out("act0", x)
+    assert len(arena) == 1
+    assert arena.resident_bytes == x.nbytes
+    with pytest.raises(KeyError):
+        arena.stage_out("act0", x)
+    back = arena.stage_in("act0")
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+    assert len(arena) == 0
+    assert arena.bytes_out == arena.bytes_in == x.nbytes
+    assert arena.estimated_transfer_s() > 0
+
+    # staged buffer shows up in the recorded host-side profile
+    prof = arena.profile()
+    assert prof.n == 1
+    assert prof.blocks[0].tag == "host:act0"
+    assert prof.blocks[0].size >= x.nbytes

@@ -296,3 +296,12 @@ def test_engine_hbm_admission_cap(tiny_model):
 def eng_probe_bytes(cfg, trace):
     from repro.serving.pages import concurrency_bytes
     return concurrency_bytes(cfg, trace, page_tokens=8, batch=1)
+
+
+def test_deprecated_serve_lib_import_path_resolves_and_warns():
+    from repro.runtime import serve_lib
+
+    # shim is lazy: importing the module is silent, accessing the name warns
+    with pytest.warns(DeprecationWarning, match="repro.serving"):
+        old = serve_lib.ServeEngine
+    assert old is ServeEngine
