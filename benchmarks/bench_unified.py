@@ -1,0 +1,127 @@
+"""Beyond-paper: one HBM arena for concurrent serve + fine-tune.
+
+The serving tenant is a paged-staircase profile at full qwen2-0.5b scale; the
+training tenant is the liveness profile of a real (smoke-scale) grad step.
+Both submit their rectangles to one ``SharedArena`` best-fit pass; training
+instances are scheduled into the valleys of the serving load curve.
+
+Throughput is held equal across the comparison: the same request trace is
+served and the same number of fine-tune steps land per round — the only
+difference is whether each workload owns a private arena (standalone sum)
+or shares one (joint peak).  A second section tightens the budget below the
+standalone sum and lets the remat eviction search shrink the training step
+until the joint plan fits (evict-vs-share as one trade).
+
+Emits ``BENCH_unified.json``: the acceptance gate is
+``joint_peak <= 0.9 x (serving_peak + training_peak)``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+OUT_JSON = os.environ.get("BENCH_UNIFIED_JSON", "BENCH_unified.json")
+RATIO_GATE = 0.9
+
+
+def _training_profile(*, seq: int, batch: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import profile_fn
+    from repro.models import Transformer
+
+    cfg = get_config("qwen2-0.5b").smoke().with_overrides(
+        name="qwen2-0.5b-unified", n_layers=8)
+    model = Transformer(cfg)
+    bsds = {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
+    return profile_fn(
+        jax.grad(lambda p, b: model.loss_fn(p, b, remat=False)[0]),
+        model.abstract(), bsds)
+
+
+def main(quick: bool = False):
+    from repro.configs import get_config
+    from repro.core import MemoryPlanner
+    from repro.runtime.serve_lib import synth_trace
+    from repro.serving.pages import plan_pool
+
+    print("# Unified: name,us_per_call,derived")
+    n_req, train_steps = (12, 4) if quick else (24, 6)
+    seq, batch = (64, 4) if quick else (128, 4)
+
+    cfg = get_config("qwen2-0.5b")
+    trace = synth_trace(n_req, prompt_len=64, gen_len=96, seed=0, jitter=False)
+    pool_plan = plan_pool(cfg, trace, page_tokens=32)
+    tprof = _training_profile(seq=seq, batch=batch)
+    planner = MemoryPlanner()
+
+    # -- scenario 1: generous budget — measure the pure sharing win ----------
+    serve_peak = planner.plan(pool_plan.profile).peak
+    train_peak = planner.plan(tprof).peak
+    arena = planner.plan_shared(
+        hbm_budget=2 * (serve_peak + train_peak) + tprof.retained_bytes,
+        serving_profile=pool_plan.profile, training_profile=tprof,
+        train_steps=train_steps, shrink=None)
+    plan = arena.plan()
+    s = plan.summary()
+    ratio = s["joint_vs_sum"]
+    served_tokens = sum(r.prompt_len + r.gen_len for r in trace)
+    derived = (f"serve_MB={serve_peak / 1e6:.2f};train_MB={train_peak / 1e6:.2f};"
+               f"joint_MB={plan.joint_peak / 1e6:.2f};ratio={ratio:.3f};"
+               f"win_MB={plan.sharing_win / 1e6:.2f};"
+               f"train_steps={train_steps};gate={'PASS' if ratio <= RATIO_GATE else 'FAIL'}")
+    print(f"unified/concurrent/qwen2-0.5b,0.0,{derived}")
+
+    # -- scenario 2: tight budget, dense traffic — evict-vs-share as one
+    # trade.  All requests arrive at once, so the serving load curve has no
+    # deep valleys for training to hide in; the budget sits below the joint
+    # demand and the arena must ask the remat search to shrink the step.
+    from repro.runtime.serve_lib import Request
+    dense = [Request(rid=r.rid, prompt_len=r.prompt_len, gen_len=r.gen_len,
+                     arrival=min(r.arrival, 2)) for r in trace]
+    dense_plan = plan_pool(cfg, dense, page_tokens=32)
+    dense_peak = planner.plan(dense_plan.profile).peak
+    tight_budget = tprof.retained_bytes + dense_peak + int(0.35 * train_peak)
+    tight = planner.plan_shared(
+        hbm_budget=tight_budget, serving_profile=dense_plan.profile,
+        training_profile=tprof, train_steps=train_steps, shrink="remat")
+    tplan = tight.plan()
+    tderived = (f"budget_MB={tight_budget / 1e6:.2f};"
+                f"serve_MB={dense_peak / 1e6:.2f};"
+                f"joint_MB={tplan.joint_peak / 1e6:.2f};"
+                f"feasible={tplan.feasible};shrink_rounds={tplan.shrink_rounds}")
+    print(f"unified/tight/qwen2-0.5b,0.0,{tderived}")
+
+    with open(OUT_JSON, "w") as f:
+        json.dump({
+            "arch": "qwen2-0.5b",
+            "quick": quick,
+            "throughput": {"n_requests": n_req, "served_tokens": served_tokens,
+                           "train_steps_per_round": train_steps,
+                           "train_batch": batch, "train_seq": seq},
+            "standalone": {"serving_peak": serve_peak,
+                           "training_peak": train_peak,
+                           "sum": serve_peak + train_peak},
+            "joint_peak": plan.joint_peak,
+            "ratio_joint_vs_sum": ratio,
+            "sharing_win_bytes": plan.sharing_win,
+            "ratio_gate": RATIO_GATE,
+            "gate_pass": ratio <= RATIO_GATE,
+            "schedule": {k: list(v) for k, v in plan.schedule.items()},
+            "tight_budget": {"budget": tight_budget,
+                             "dense_serving_peak": dense_peak,
+                             "joint_peak": tplan.joint_peak,
+                             "feasible": tplan.feasible,
+                             "shrink_rounds": tplan.shrink_rounds,
+                             "reserves": dict(tplan.reserves)},
+        }, f, indent=2)
+    print(f"# wrote {OUT_JSON}")
+    if ratio > RATIO_GATE:
+        raise AssertionError(
+            f"unified sharing win below gate: joint/sum={ratio:.3f} > {RATIO_GATE}")
+
+
+if __name__ == "__main__":
+    main()

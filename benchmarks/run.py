@@ -6,6 +6,7 @@
   sec53   seq2seq variable-length reoptimization           (paper §5.3)
   serve   beyond-paper: DSA on LLM serving KV traces
   remat   beyond-paper: profile-guided rematerialization for training
+  unified beyond-paper: one HBM arena for concurrent serve + fine-tune
   roofline (optional, needs results/dryrun)                (EXPERIMENTS §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV per line.
@@ -23,7 +24,7 @@ import traceback
 def _import_benches():
     try:
         from . import (bench_alloc_time, bench_heuristic, bench_memory,
-                       bench_remat, bench_reopt, bench_serving)
+                       bench_remat, bench_reopt, bench_serving, bench_unified)
     except ImportError:
         # script mode (`python benchmarks/run.py`): repo root + src on path,
         # then import the benchmarks namespace package absolutely
@@ -33,9 +34,9 @@ def _import_benches():
                 sys.path.insert(0, p)
         from benchmarks import (bench_alloc_time, bench_heuristic,
                                 bench_memory, bench_remat, bench_reopt,
-                                bench_serving)
+                                bench_serving, bench_unified)
     return (bench_alloc_time, bench_heuristic, bench_memory, bench_remat,
-            bench_reopt, bench_serving)
+            bench_reopt, bench_serving, bench_unified)
 
 
 def main() -> None:
@@ -45,7 +46,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = args.quick or bool(int(os.environ.get("BENCH_QUICK", "0")))
     (bench_alloc_time, bench_heuristic, bench_memory,
-     bench_remat, bench_reopt, bench_serving) = _import_benches()
+     bench_remat, bench_reopt, bench_serving, bench_unified) = _import_benches()
     sections = [
         ("fig2", bench_memory.main),
         ("fig3", bench_alloc_time.main),
@@ -53,6 +54,7 @@ def main() -> None:
         ("sec53", bench_reopt.main),
         ("serve", bench_serving.main),
         ("remat", bench_remat.main),
+        ("unified", bench_unified.main),
     ]
     failures = 0
     for name, fn in sections:

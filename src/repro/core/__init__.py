@@ -12,6 +12,7 @@ Public API:
   - arena.ArenaAllocator (O(1) planned allocation + reoptimization, §4)
   - pool: PoolAllocator / NaiveAllocator baselines (§2, §5.1)
   - planner.MemoryPlanner (framework-level planning services)
+  - unified.SharedArena (one HBM budget shared by serve + train tenants)
 """
 from .arena import ArenaAllocator
 from .bestfit import best_fit
@@ -19,15 +20,17 @@ from .dsa import AllocationPlan, PlanValidationError, plan_quality, validate_pla
 from .events import Block, MemoryProfile, align, make_profile
 from .exact import solve_exact
 from .liveness import profile_fn, profile_jaxpr
-from .mip import to_lp
+from .mip import exact_eviction_peak, to_lp, to_lp_eviction
 from .planner import MemoryPlanner, PlanReport
 from .pool import NaiveAllocator, PoolAllocator, replay
 from .profiler import MemoryRecorder
+from .unified import SharedArena, SharedArenaError, SharedPlan, TenantView
 
 __all__ = [
     "AllocationPlan", "ArenaAllocator", "Block", "MemoryPlanner", "MemoryProfile",
     "MemoryRecorder", "NaiveAllocator", "PlanReport", "PlanValidationError",
-    "PoolAllocator", "align", "best_fit", "make_profile", "plan_quality",
-    "profile_fn", "profile_jaxpr", "replay", "solve_exact", "to_lp",
-    "validate_plan",
+    "PoolAllocator", "SharedArena", "SharedArenaError", "SharedPlan",
+    "TenantView", "align", "best_fit", "exact_eviction_peak", "make_profile",
+    "plan_quality", "profile_fn", "profile_jaxpr", "replay", "solve_exact",
+    "to_lp", "to_lp_eviction", "validate_plan",
 ]

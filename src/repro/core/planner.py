@@ -119,20 +119,53 @@ class MemoryPlanner:
                         target_ratio: float | None = None,
                         max_evict: int = 256,
                         candidate_filter=None,
-                        price_mode: str = "auto"):
+                        price_mode: str = "auto",
+                        view=None):
         """Evict activations (recompute/offload) until the packed peak meets
         the target; returns the ``repro.remat.EvictionPlan``.
 
         ``target_peak`` is a packing-peak target (excludes
         ``profile.retained_bytes``); with neither target the search buys
-        every peak reduction it can find.
+        every peak reduction it can find.  ``view`` (a SharedArena tenant
+        view) makes the search plan against the training tenant's share of
+        the joint budget instead.
         """
         from ..remat import plan_evictions
         return plan_evictions(profile, target_peak=target_peak,
                               target_ratio=target_ratio, max_evict=max_evict,
                               candidate_filter=candidate_filter,
                               price_mode=price_mode,
-                              solver=self.solver)
+                              solver=self.solver, view=view)
+
+    # -- unified serve x train planning (core.unified) ----------------------------
+    def plan_shared(self, *, hbm_budget: int,
+                    serving_profile: MemoryProfile | None = None,
+                    training_profile: MemoryProfile | None = None,
+                    train_steps: int = 1,
+                    shrink: str | None = "remat",
+                    max_evict: int = 256):
+        """Build a ``SharedArena`` over one HBM budget and jointly plan the
+        registered tenants.  ``shrink="remat"`` wires the eviction search as
+        the training tenant's shrink hook, so evict-vs-share is resolved in
+        the same pass.  Returns the planned ``SharedArena``.
+        """
+        from .unified import SharedArena
+        arena = SharedArena(hbm_budget, solver=self.solver)
+        if serving_profile is not None:
+            arena.register_serving(serving_profile)
+        if training_profile is not None:
+            shrink_fn = None
+            if shrink == "remat":
+                def shrink_fn(target: int):
+                    ev = self.plan_with_remat(training_profile,
+                                              target_peak=target,
+                                              max_evict=max_evict)
+                    return ev.profile if ev.evictions else None
+            arena.register_training(training_profile,
+                                    steps_per_round=train_steps,
+                                    shrink=shrink_fn)
+        arena.plan()
+        return arena
 
     def max_feasible_batch_planned(self,
                                    profile_at_batch: Callable[[int], MemoryProfile],

@@ -8,6 +8,11 @@ comparison at full arch scale (``ServingArena`` is kept as the
 slab-per-request baseline).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --requests 8
+
+``--share-hbm GB``: one budget, two workloads — a fine-tune step of the same
+(reduced) model is registered as the training tenant of a ``SharedArena``,
+the page pool becomes the serving tenant, and admission is gated against the
+serving share of the jointly planned split.
 """
 from __future__ import annotations
 
@@ -15,24 +20,14 @@ import argparse
 import random
 
 import jax
+import jax.numpy as jnp
 
 from ..configs import get_config
+from ..core import MemoryPlanner, SharedArena, profile_fn
 from ..models import Transformer
-from ..runtime.serve_lib import Request, ServingArena
+from ..runtime.serve_lib import ServingArena, synth_trace
 from ..serving import GenRequest, ServeEngine
 from .train import reduced_config
-
-
-def synth_trace(n: int, prompt_len: int, gen_len: int, seed: int = 0,
-                jitter: bool = True) -> list[Request]:
-    rng = random.Random(seed)
-    trace, t = [], 0
-    for i in range(n):
-        t += rng.randint(0, 4)
-        g = gen_len + (rng.randint(-gen_len // 3, gen_len // 3) if jitter else 0)
-        trace.append(Request(rid=i + 1, prompt_len=prompt_len,
-                             gen_len=max(2, g), arrival=t))
-    return trace
 
 
 def main() -> None:
@@ -48,10 +43,15 @@ def main() -> None:
                     help="page size in tokens (default: profile-guided)")
     ap.add_argument("--policy", choices=["fcfs", "priority"], default="fcfs")
     ap.add_argument("--prefill-chunk", type=int, default=512)
+    ap.add_argument("--share-hbm", type=float, default=0.0,
+                    help="GB of one HBM budget shared with a concurrent "
+                         "fine-tune tenant (0 = serving owns its arena)")
+    ap.add_argument("--train-steps", type=int, default=4,
+                    help="--share-hbm: fine-tune steps per serving round")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg, _, _ = reduced_config(args.arch, args.preset)
+    cfg, seq, batch = reduced_config(args.arch, args.preset)
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
@@ -68,14 +68,39 @@ def main() -> None:
           f"naive={cmp['naive_peak'] / 1e9:.2f}GB "
           f"saving_vs_pool={100 * cmp['saving_vs_pool']:.1f}%")
 
+    shared = None
+    if args.share_hbm > 0:
+        # one budget, two workloads: register the fine-tune tenant first so
+        # the engine's first joint plan sees both
+        shared = SharedArena(int(args.share_hbm * 2 ** 30))
+        planner = MemoryPlanner()
+        bsds = {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
+        tprof = profile_fn(
+            jax.grad(lambda p, b: model.loss_fn(p, b, remat=False)[0]),
+            model.abstract(), bsds)
+        tview = shared.register_training(
+            tprof, steps_per_round=args.train_steps,
+            shrink=lambda target: planner.plan_with_remat(
+                tprof, target_peak=target).profile)
+
     eng = ServeEngine(model, params, sample_trace=trace, max_len=args.max_len,
                       max_batch=args.max_batch, page_tokens=args.page_tokens,
                       policy=args.policy, prefill_chunk=args.prefill_chunk,
-                      accounting_cfg=full_cfg)
+                      accounting_cfg=full_cfg, shared=shared)
     kv = eng.kv.stats()
     print(f"[paged pool] page_tokens={kv['page_tokens']} "
           f"n_pages={kv['n_pages']} pool={kv['pool_bytes'] / 1e6:.2f}MB "
           f"(planned peak {kv['planned_peak'] / 1e6:.2f}MB)")
+    if shared is not None:
+        s = shared.stats()
+        print(f"[shared arena] budget={s['hbm_budget'] / 1e9:.2f}GB "
+              f"joint_peak={s['joint_peak'] / 1e6:.2f}MB "
+              f"standalone_sum={s['standalone_sum'] / 1e6:.2f}MB "
+              f"win={s['sharing_win'] / 1e6:.2f}MB "
+              f"(joint/sum={s['joint_vs_sum']:.2f}) "
+              f"train_steps@{s['schedule'].get('training', [])} "
+              f"serving_cap={eng.sched.cap} "
+              f"train_budget={tview.budget / 1e6:.2f}MB")
 
     # live traffic: same shapes with jitter, so some requests outgrow the
     # profile and exercise preemption + §4.3 replanning
@@ -98,6 +123,11 @@ def main() -> None:
           f"reopts={summary['kv_n_reopt']}")
     for rid in sorted(eng.completed)[:3]:
         print(f"  req {rid}: {eng.completed[rid][:8]}...")
+    if shared is not None:
+        print(f"[shared arena] boundary_reopts={shared.n_reopt} "
+              f"feasible={shared.plan().feasible} "
+              f"reserves={{'serving': {shared.plan().reserves['serving'] / 1e6:.1f}MB, "
+              f"'training': {shared.plan().reserves['training'] / 1e6:.1f}MB}}")
 
 
 if __name__ == "__main__":

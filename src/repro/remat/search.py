@@ -25,13 +25,12 @@ from typing import Callable, Optional
 
 from ..core.bestfit import best_fit
 from ..core.dsa import AllocationPlan
-from ..core.events import Block, MemoryProfile
+from ..core.events import MemoryProfile
+# The stub transform lives in core so this search and the exact MIP
+# (core/mip.py) provably optimize the same objective.
+from ..core.evict import MIN_EVICT_LIFETIME as _MIN_EVICT_LIFETIME
+from ..core.evict import evict_block
 from .cost_model import CostModel
-
-# One tick at production, one at re-materialization before the final use.
-_STUB_TICKS = 1
-# A block must live at least this long for stubbing to remove any area.
-_MIN_EVICT_LIFETIME = 2 * _STUB_TICKS + 2
 
 
 @dataclass(frozen=True)
@@ -85,26 +84,6 @@ class EvictionPlan:
         }
 
 
-def evict_block(b: Block, next_bid: int, steps: int = 1) -> list[Block]:
-    """Shrink ``b`` to its production + re-materialization stubs.
-
-    The head stub keeps the original bid (so plan offsets stay addressable);
-    the tail stub gets a fresh id.  ``steps > 1`` marks a scan-stacked
-    residual (``profile.meta["block_steps"]``): under remat only one
-    per-step slice is ever materialized at a time, so both stubs shrink to
-    size/steps.  Returns [] for blocks too short to evict.
-    """
-    if b.lifetime < _MIN_EVICT_LIFETIME:
-        return []
-    stub_size = max(b.size // max(steps, 1), 1)
-    return [
-        Block(bid=b.bid, size=stub_size, start=b.start,
-              end=b.start + _STUB_TICKS, tag=b.tag),
-        Block(bid=next_bid, size=stub_size, start=b.end - _STUB_TICKS,
-              end=b.end, tag=f"{b.tag}:rematerialize"),
-    ]
-
-
 def plan_evictions(profile: MemoryProfile,
                    costs: Optional[CostModel] = None, *,
                    target_peak: Optional[int] = None,
@@ -115,6 +94,7 @@ def plan_evictions(profile: MemoryProfile,
                    candidate_filter=None,
                    price_mode: str = "auto",
                    solver: Callable[[MemoryProfile], AllocationPlan] = best_fit,
+                   view=None,
                    ) -> EvictionPlan:
     """Select evictions until the packed peak meets the target (or stalls).
 
@@ -126,9 +106,17 @@ def plan_evictions(profile: MemoryProfile,
     (recompute vs offload); "recompute" prices and labels everything as
     recompute, for callers whose delivery mechanism is a ``jax.checkpoint``
     policy (which folds offload selections into the recompute set).
+
+    ``view`` — a ``core.unified.TenantView``: the search plans against the
+    training tenant's share of a SharedArena instead of owning its own
+    budget.  Without an explicit target, the target peak is the tenant's
+    joint-plan budget, and the post-eviction profile is staged back so the
+    arena rebalances the split at its next round boundary.
     """
     if price_mode not in ("auto", "recompute"):
         raise ValueError(f"unknown price_mode {price_mode!r}")
+    if view is not None and target_peak is None and target_ratio is None:
+        target_peak = view.budget
     costs = costs or CostModel.from_profile(profile)
     base_plan = solver(profile)
     baseline_peak = base_plan.peak
@@ -195,6 +183,8 @@ def plan_evictions(profile: MemoryProfile,
                                   retained_bytes=profile.retained_bytes,
                                   clock_end=profile.clock_end,
                                   meta=dict(profile.meta, evicted=len(evictions)))
+    if view is not None and evictions:
+        view.request_replan(final_profile)   # §4.3: rebalance at the boundary
     return EvictionPlan(
         evictions=evictions,
         baseline_peak=baseline_peak,

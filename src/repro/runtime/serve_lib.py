@@ -132,6 +132,21 @@ class Request:
     arrival: int            # engine step index
 
 
+def synth_trace(n: int, prompt_len: int, gen_len: int, seed: int = 0,
+                jitter: bool = True) -> list[Request]:
+    """Synthetic request trace with staggered arrivals (profile/bench/launch
+    helper; jitter models live traffic outgrowing the profiled lengths)."""
+    import random
+    rng = random.Random(seed)
+    trace, t = [], 0
+    for i in range(n):
+        t += rng.randint(0, 4)
+        g = gen_len + (rng.randint(-gen_len // 3, gen_len // 3) if jitter else 0)
+        trace.append(Request(rid=i + 1, prompt_len=prompt_len,
+                             gen_len=max(2, g), arrival=t))
+    return trace
+
+
 def request_blocks(requests: list[Request], cfg: ModelConfig,
                    alignment: int = 4096) -> MemoryProfile:
     """Requests -> DSA blocks: size = cache bytes at final length, lifetime =

@@ -80,13 +80,19 @@ def plan_remat_policy(model: Transformer, batch_sds: dict, *,
                       target_ratio: float = 0.5,
                       target_peak: Optional[int] = None,
                       planner=None, max_rounds: int = 3,
-                      profile=None):
+                      profile=None, shared=None):
     """Profile the no-remat grad step, search evictions, compile the policy.
 
     Returns ``(RematPolicy, EvictionPlan)`` — the profile-guided replacement
     for ``TrainOpts(remat=True)``.  Profiles are taken over ``grad(loss)``
     on abstract params/batch, so nothing is allocated; pass ``profile`` to
     reuse an already-computed no-remat profile.
+
+    ``shared`` — a ``core.unified.TenantView`` for the training tenant (the
+    ``--share-hbm`` path): the eviction target becomes the tenant's share of
+    the joint serve+train budget, and the final post-eviction profile is
+    staged back so the SharedArena rebalances the split at its next round
+    boundary.
 
     The compile is closed-loop: a primitive-level policy can miss the target
     the block-level search hit (residuals of unselected primitives survive),
@@ -116,6 +122,8 @@ def plan_remat_policy(model: Transformer, batch_sds: dict, *,
     # Delivery is a jax.checkpoint policy, so price everything at recompute
     # cost (offload-mode selections compile into the recompute set too).
     prof = profile if profile is not None else prof_with(False)
+    if shared is not None and target_peak is None:
+        target_peak = shared.budget     # the tenant's share of the split
     ev0 = planner.plan_with_remat(prof, target_peak=target_peak,
                                   target_ratio=None if target_peak else target_ratio,
                                   candidate_filter=expressible,
@@ -160,6 +168,11 @@ def plan_remat_policy(model: Transformer, batch_sds: dict, *,
         meta={"rounds": rounds, "verified": policy.enabled,
               "policy": policy.describe()},
     )
+    if shared is not None:
+        # stage the verified post-remat step rectangles; the SharedArena
+        # rebalances the serve/train split at its next round boundary
+        shared.request_replan(final_profile)
+        shared.shared.reset_round()
     return policy, ev
 
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from ..configs.base import ModelConfig
+from ..core.unified import SharedArena
 from ..models.transformer import Transformer
 from ..runtime.serve_lib import (Request, build_decode_step,
                                  build_prefill_step)
@@ -39,16 +40,28 @@ class ServeEngine:
                  policy: str = "fcfs", prefill_chunk: int = 512,
                  hbm_budget: Optional[int] = None, reserve_pages: int = 0,
                  accounting_cfg: Optional[ModelConfig] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 shared: Optional[SharedArena] = None):
         """``accounting_cfg`` lets the page pool account at full-size arch
-        scale while a reduced model executes (the launch-driver pattern)."""
+        scale while a reduced model executes (the launch-driver pattern).
+
+        ``shared`` (the ``--share-hbm`` path): the page pool becomes the
+        serving tenant of a ``SharedArena`` — admission is gated against the
+        tenant's share of the joint budget (register any training tenant on
+        the arena *before* constructing the engine, so the first joint plan
+        sees both workloads)."""
         self.model = model
         self.params = params
         self.max_len = max_len
         self.max_batch = max_batch
         acct = accounting_cfg or model.cfg
+        self._acct = acct
+        self._sample_trace = list(sample_trace)
         self.kv = PagedKVCache(acct, sample_trace, page_tokens=page_tokens,
-                               reserve_pages=reserve_pages)
+                               reserve_pages=reserve_pages, shared=shared)
+        if hbm_budget is None and self.kv.tenant is not None:
+            # unified mode: the HBM gate is this tenant's share of the split
+            hbm_budget = self.kv.tenant.budget
         cap = None
         if hbm_budget is not None:
             cap = pages_lib.max_concurrency(acct, sample_trace,
@@ -87,6 +100,17 @@ class ServeEngine:
         self.step_count += 1
         if self.sched.idle:
             self.kv.reset_epoch()       # epoch boundary: §4.3 replan if dirty
+            self._refresh_cap()
+
+    def _refresh_cap(self) -> None:
+        """Unified mode: a boundary replan may have rebalanced the split, so
+        re-gate admission against the serving tenant's current share."""
+        if self.kv.tenant is None:
+            return
+        cap = pages_lib.max_concurrency(self._acct, self._sample_trace,
+                                        self.kv.page_tokens,
+                                        self.kv.tenant.budget)
+        self.sched.cap = max(1, min(self.max_batch, cap))
 
     def _model_prefill(self, sr: ScheduledRequest) -> None:
         self.metrics.n_prefill_tokens += sr.prompt_len

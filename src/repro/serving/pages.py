@@ -30,6 +30,7 @@ from ..core import (ArenaAllocator, Block, MemoryPlanner, MemoryProfile,
                     align, best_fit)
 from ..core.events import DEFAULT_ALIGNMENT
 from ..core.pool import NaiveAllocator, PoolAllocator, replay
+from ..core.unified import SharedArena, TenantView
 from ..runtime.serve_lib import Request, cache_bytes_per_token, state_bytes
 
 PAGE_TOKEN_CANDIDATES = (8, 16, 32, 64, 128)
@@ -203,7 +204,14 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, sample_trace: Sequence[Request],
                  page_tokens: Optional[int] = None,
-                 reserve_pages: int = 0, solver=best_fit):
+                 reserve_pages: int = 0, solver=best_fit,
+                 shared: Optional[SharedArena] = None,
+                 tenant_name: str = "serving"):
+        """With ``shared``, the pool stops owning its memory claim: its
+        staircase profile is registered as the serving tenant of the
+        ``SharedArena``, replans are forwarded as §4.3 requests, and pool
+        growth at epoch boundaries is clamped to the tenant's share of the
+        joint budget."""
         self.cfg = cfg
         self.solver = solver
         if page_tokens is None:
@@ -216,6 +224,10 @@ class PagedKVCache:
         self.n_pages = self.plan.n_pages + reserve_pages
         self.arena = ArenaAllocator(self.plan.profile, solver=solver,
                                     mode="immediate")
+        self.tenant: Optional[TenantView] = None
+        if shared is not None:
+            self.tenant = shared.register_serving(self.plan.profile,
+                                                  name=tenant_name)
         self._free: list[int] = list(range(self.n_pages - 1, -1, -1))
         self.tables: dict[int, list[int]] = {}     # rid -> page ids
         self._addrs: dict[int, list[int]] = {}     # rid -> arena addrs
@@ -297,17 +309,31 @@ class PagedKVCache:
     def request_replan(self) -> None:
         """Flag observed pressure (e.g. a preemption): replan at the boundary."""
         self.arena.request_replan()
+        if self.tenant is not None:
+            self.tenant.request_replan()
 
     def reset_epoch(self) -> None:
         """Boundary: §4.3 replan from the shadow-observed stream, then resize
-        the physical pool to the new planned peak (never below live pages)."""
+        the physical pool to the new planned peak (never below live pages).
+        In shared mode the observed staircase is pushed to the SharedArena,
+        the joint split is rebalanced, and growth is clamped to the serving
+        tenant's share of the joint budget."""
+        replanned = self.arena.n_reopt
         self.arena.reset_iteration()
+        if self.tenant is not None and self.arena.n_reopt > replanned:
+            # decode outran the profile: hand the observed rectangles to the
+            # joint planner and rebalance the split at this boundary
+            self.tenant.request_replan(self.arena.profile)
+            self.tenant.shared.reset_round()
         planned = max(1, math.ceil(self.arena.peak / self.page_bytes))
         held = [p for t in self.tables.values() for p in t]
         # never shrink below the highest live page id: a later growth would
         # re-issue a held id and alias two requests onto one page
         floor = max(held) + 1 if held else 0
         target = max(planned + self.reserve_pages, floor)
+        if self.tenant is not None:
+            budget_pages = self.tenant.budget // self.page_bytes
+            target = max(min(target, budget_pages), floor, 1)
         if target != self.n_pages:
             if target > self.n_pages:
                 self._free.extend(range(self.n_pages, target))
@@ -318,7 +344,7 @@ class PagedKVCache:
 
     def stats(self) -> dict:
         a = self.arena.stats()
-        return {
+        out = {
             "page_tokens": self.page_tokens,
             "page_bytes": self.page_bytes,
             "n_pages": self.n_pages,
@@ -331,3 +357,6 @@ class PagedKVCache:
             "max_peak": a["max_peak"],
             "overflow_peak": a["overflow_peak"],
         }
+        if self.tenant is not None:
+            out["tenant"] = self.tenant.stats()
+        return out

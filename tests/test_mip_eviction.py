@@ -1,0 +1,126 @@
+"""Exact-vs-heuristic eviction selection (the Fig. 4 analogue for remat).
+
+``core.mip.exact_eviction_peak`` enumerates eviction subsets and solves each
+residual DSA exactly; the greedy ``remat.search.plan_evictions`` must never
+beat it, and on small instances must stay within a bounded gap of it.
+"""
+import random
+
+import pytest
+
+from repro.core import (best_fit, exact_eviction_peak, make_profile,
+                        to_lp_eviction, validate_plan)
+from repro.core.mip import eviction_candidates
+from repro.remat import plan_evictions
+from repro.remat.search import _MIN_EVICT_LIFETIME
+
+
+def _fat_block_instance():
+    """A long fat block spans four short phases: evicting it to stubs wins."""
+    return make_profile([
+        (4096, 0, 12),               # the fat candidate
+        (2048, 0, 3), (2048, 3, 6), (2048, 6, 9), (2048, 9, 12),
+        (1024, 2, 8),
+    ], alignment=1)
+
+
+def _random_instance(seed: int, n: int = 7):
+    rng = random.Random(seed)
+    items = []
+    for _ in range(n):
+        start = rng.randint(0, 8)
+        dur = rng.randint(1, 10)
+        items.append((rng.choice([256, 512, 1024, 2048, 4096]),
+                      start, start + dur))
+    return make_profile(items, alignment=1)
+
+
+# ---------------------------------------------------------------------------
+# exact enumerator
+# ---------------------------------------------------------------------------
+
+
+def test_exact_eviction_improves_on_exact_packing():
+    prof = _fat_block_instance()
+    no_evict = exact_eviction_peak(prof, candidate_bids=[], max_evict=0)
+    with_evict = exact_eviction_peak(prof, max_evict=3, max_candidates=5)
+    assert with_evict["peak"] < no_evict["peak"]    # eviction actually buys peak
+    assert with_evict["proven_optimal"]
+    assert 0 in with_evict["evicted"]               # the fat block goes
+    # the winning subset's transformed profile packs without any overlap
+    validate_plan(with_evict["profile"], with_evict["plan"])
+
+
+def test_exact_eviction_candidates_respect_lifetime_floor():
+    prof = _fat_block_instance()
+    for bid in eviction_candidates(prof, max_candidates=10):
+        blk = next(b for b in prof.blocks if b.bid == bid)
+        assert blk.lifetime >= _MIN_EVICT_LIFETIME
+
+
+def test_exact_subset_count_matches_enumeration():
+    prof = _fat_block_instance()
+    out = exact_eviction_peak(prof, max_evict=2, max_candidates=2)
+    # C(2,0) + C(2,1) + C(2,2) = 4 subsets
+    assert out["n_subsets"] == 4
+
+
+# ---------------------------------------------------------------------------
+# exact lower-bounds / matches the greedy search (gap assertion)
+# ---------------------------------------------------------------------------
+
+
+def test_exact_lower_bounds_greedy_on_crafted_instance():
+    prof = _fat_block_instance()
+    greedy = plan_evictions(prof, max_evict=3)
+    exact = exact_eviction_peak(prof, max_evict=3, max_candidates=5)
+    assert exact["peak"] <= greedy.peak
+    # on this instance the greedy area-per-cost order finds the optimum
+    assert greedy.peak == exact["peak"]
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_exact_vs_greedy_gap_on_random_small_instances(seed):
+    prof = _random_instance(seed)
+    greedy = plan_evictions(prof, max_evict=2, max_candidates=6)
+    exact = exact_eviction_peak(prof, max_evict=2, max_candidates=6)
+    assert exact["peak"] <= greedy.peak             # exact is a lower bound
+    if exact["proven_optimal"]:
+        # greedy stays within 1.5x of the proven joint optimum (Fig. 4-style
+        # gap statement; the paper reports best-fit within ~5% on real nets,
+        # adversarial random instances get a looser, still-bounded gap)
+        assert greedy.peak <= 1.5 * exact["peak"]
+
+
+def test_exact_eviction_peak_never_above_no_eviction_packing():
+    for seed in range(4):
+        prof = _random_instance(seed + 100)
+        base = exact_eviction_peak(prof, candidate_bids=[], max_evict=0)
+        out = exact_eviction_peak(prof, max_evict=3, max_candidates=5)
+        assert out["peak"] <= base["peak"]
+
+
+# ---------------------------------------------------------------------------
+# LP export with eviction binaries
+# ---------------------------------------------------------------------------
+
+
+def test_to_lp_eviction_structure():
+    prof = _fat_block_instance()
+    W = best_fit(prof).peak
+    lp = to_lp_eviction(prof, max_memory=W, max_evict=2)
+    assert lp.startswith("\\ DSA MIP with eviction binaries")
+    assert "Minimize" in lp and "Binaries" in lp and lp.rstrip().endswith("End")
+    assert " e_0" in lp                             # eviction binary emitted
+    assert "evict_budget:" in lp                    # sum e_i <= max_evict
+    assert "xt_0" in lp                             # tail-stub offset variable
+    # gating: the full rectangle's peak constraint must be e-relaxed
+    assert any("peak_A_0" in ln and "e_0" in ln for ln in lp.splitlines())
+
+
+def test_to_lp_eviction_no_candidates_degenerates_to_plain_dsa():
+    prof = make_profile([(100, 0, 2), (100, 1, 3)], alignment=1)
+    lp = to_lp_eviction(prof, max_memory=200, candidate_bids=[])
+    assert " e_" not in lp
+    assert "xt_" not in lp
+    assert "no_ov_a_A_0_A_1" in lp                  # plain disjunction remains

@@ -1,0 +1,188 @@
+"""No two live allocations may overlap in (time x address) — ever.
+
+The single invariant behind every planner in the repo, checked with an
+independent O(n^2) rectangle checker (not ``validate_plan``, so a bug in the
+sweep can't hide a bug in the solver) over the three trace families the
+system actually plans:
+
+  * serving page staircases  (``serving.pages.paged_request_blocks``)
+  * remat-evicted profiles   (``remat.search.plan_evictions``)
+  * mixed-tenant joint plans (``core.unified.SharedArena``)
+
+Deterministic seeded sweeps always run; when hypothesis is installed (CI
+installs the ``test`` extra) the same generators run as property tests with
+minimized counterexamples.
+"""
+import random
+
+import pytest
+
+from repro.core import (MemoryProfile, SharedArena, best_fit, make_profile,
+                        solve_exact)
+from repro.remat import plan_evictions
+from repro.runtime.serve_lib import Request
+from repro.serving.pages import paged_request_blocks
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# the invariant, checked independently of validate_plan
+# ---------------------------------------------------------------------------
+
+
+def assert_no_live_overlap(profile: MemoryProfile, plan) -> None:
+    """Brute-force: every pair of co-live blocks occupies disjoint bytes."""
+    bs = [b for b in profile.blocks if b.size > 0]
+    for b in bs:
+        x = plan.offsets[b.bid]
+        assert x >= 0
+        assert x + b.size <= plan.peak
+    for i in range(len(bs)):
+        bi, xi = bs[i], plan.offsets[bs[i].bid]
+        for j in range(i + 1, len(bs)):
+            bj, xj = bs[j], plan.offsets[bs[j].bid]
+            time_overlap = bi.start < bj.end and bj.start < bi.end
+            addr_overlap = xi < xj + bj.size and xj < xi + bi.size
+            assert not (time_overlap and addr_overlap), (
+                f"blocks {bi.bid} and {bj.bid} share bytes while both live")
+
+
+# ---------------------------------------------------------------------------
+# generators (plain functions -> usable from both seeded and property tests)
+# ---------------------------------------------------------------------------
+
+
+def staircase_trace(seed: int, n_requests: int) -> list[Request]:
+    rng = random.Random(seed)
+    t = 0
+    out = []
+    for i in range(n_requests):
+        t += rng.randint(0, 5)
+        out.append(Request(rid=i + 1, prompt_len=rng.randint(1, 200),
+                           gen_len=rng.randint(2, 120), arrival=t))
+    return out
+
+
+def random_profile(seed: int, n_blocks: int) -> MemoryProfile:
+    rng = random.Random(seed)
+    items = []
+    for _ in range(n_blocks):
+        start = rng.randint(0, 30)
+        items.append((rng.randint(0, 1 << 14), start,
+                      start + rng.randint(1, 15)))
+    return make_profile(items)
+
+
+def _serving_cfg():
+    from repro.configs import get_config
+    return get_config("qwen2-0.5b")
+
+
+def check_staircase(trace, page_tokens: int) -> None:
+    prof = paged_request_blocks(trace, _serving_cfg(), page_tokens)
+    assert_no_live_overlap(prof, best_fit(prof))
+
+
+def check_evicted(profile: MemoryProfile, max_evict: int) -> None:
+    ev = plan_evictions(profile, max_evict=max_evict)
+    assert_no_live_overlap(ev.profile, ev.plan)
+    assert ev.peak <= ev.baseline_peak
+
+
+def check_shared(trace, train_profile: MemoryProfile, steps: int) -> None:
+    arena = SharedArena(1 << 40)
+    arena.register_serving(
+        paged_request_blocks(trace, _serving_cfg(), 16))
+    arena.register_training(train_profile, steps_per_round=steps)
+    plan = arena.plan()
+    assert_no_live_overlap(plan.profile, plan.plan)
+    # reserves account for exactly the joint peak, no tenant in the red
+    assert sum(plan.reserves.values()) == plan.joint_peak
+    assert all(r >= 0 for r in plan.reserves.values())
+
+
+# ---------------------------------------------------------------------------
+# deterministic seeded sweeps (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_serving_staircases_never_overlap(seed):
+    check_staircase(staircase_trace(seed, 3 + seed), page_tokens=8 << (seed % 3))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_remat_evicted_profiles_never_overlap(seed):
+    check_evicted(random_profile(seed, 6 + 3 * seed), max_evict=4)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_mixed_tenant_shared_plans_never_overlap(seed):
+    check_shared(staircase_trace(seed, 4), random_profile(seed + 50, 8),
+                 steps=1 + seed % 3)
+
+
+def test_shared_plan_survives_boundary_replan():
+    """A §4.3 replan must re-establish the invariant, not corrupt it."""
+    arena = SharedArena(1 << 40)
+    trace = staircase_trace(3, 4)
+    sv = arena.register_serving(paged_request_blocks(trace, _serving_cfg(), 16))
+    arena.register_training(random_profile(7, 8), steps_per_round=2)
+    arena.plan()
+    # serving observes longer generations: stage a grown staircase
+    grown = [Request(rid=r.rid, prompt_len=r.prompt_len,
+                     gen_len=r.gen_len + 64, arrival=r.arrival) for r in trace]
+    sv.request_replan(paged_request_blocks(grown, _serving_cfg(), 16))
+    assert arena.reset_round()
+    plan = arena.plan()
+    assert_no_live_overlap(plan.profile, plan.plan)
+    assert sum(plan.reserves.values()) == plan.joint_peak
+
+
+def test_exact_solver_upholds_invariant_on_small_instances():
+    for seed in range(3):
+        prof = random_profile(seed, 6)
+        assert_no_live_overlap(prof, solve_exact(prof, node_limit=20_000,
+                                                 time_limit_s=5))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (run in CI, where the test extra is installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    traces = st.lists(
+        st.tuples(st.integers(1, 200), st.integers(2, 120),
+                  st.integers(0, 40)),
+        min_size=1, max_size=8).map(
+        lambda items: [Request(rid=i + 1, prompt_len=p, gen_len=g, arrival=a)
+                       for i, (p, g, a) in enumerate(items)])
+
+    block_strategy = st.tuples(
+        st.integers(min_value=0, max_value=1 << 14),
+        st.integers(min_value=0, max_value=30),
+        st.integers(min_value=1, max_value=15),
+    ).map(lambda t: (t[0], t[1], t[1] + t[2]))
+    profiles = st.lists(block_strategy, min_size=1,
+                        max_size=24).map(make_profile)
+
+    @given(traces, st.sampled_from([8, 16, 64]))
+    @settings(max_examples=40, deadline=None)
+    def test_prop_serving_staircases_never_overlap(trace, page_tokens):
+        check_staircase(trace, page_tokens)
+
+    @given(profiles, st.integers(0, 6))
+    @settings(max_examples=60, deadline=None)
+    def test_prop_remat_evicted_profiles_never_overlap(prof, max_evict):
+        check_evicted(prof, max_evict)
+
+    @given(traces, profiles, st.integers(1, 3))
+    @settings(max_examples=25, deadline=None)
+    def test_prop_mixed_tenant_shared_plans_never_overlap(trace, prof, steps):
+        check_shared(trace, prof, steps)

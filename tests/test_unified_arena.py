@@ -1,0 +1,202 @@
+"""Concurrent serve + fine-tune under ONE HBM budget (core.unified).
+
+The serving engine's page pool and the training tenant's activation plan
+share a ``SharedArena``: admission stays gated by ``max_feasible_batch``
+(through the serving tenant's share of the split), and a §4.3 replan
+triggered by decode outgrowing its profile rebalances the boundary without
+corrupting the training tenant's plan.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import (MemoryPlanner, SharedArena, SharedArenaError,
+                        best_fit, make_profile, profile_fn, validate_plan)
+from repro.models import Transformer
+from repro.runtime.serve_lib import Request
+from repro.runtime.train_lib import plan_remat_policy
+from repro.serving import GenRequest, PagedKVCache, ServeEngine
+from repro.serving.pages import paged_request_blocks
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2-0.5b").smoke()
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def train_profile(tiny_model):
+    cfg, model, _ = tiny_model
+    bsds = {"tokens": jax.ShapeDtypeStruct((2, 17), jnp.int32)}
+    return profile_fn(
+        jax.grad(lambda p, b: model.loss_fn(p, b, remat=False)[0]),
+        model.abstract(), bsds)
+
+
+def _trace(n=4, prompt=8, gen=6):
+    return [Request(rid=i + 1, prompt_len=prompt, gen_len=gen, arrival=2 * i)
+            for i in range(n)]
+
+
+def _live(cfg, trace, gen_override=None):
+    return [GenRequest(rid=r.rid,
+                       prompt=jax.random.randint(jax.random.PRNGKey(r.rid),
+                                                 (r.prompt_len,), 0,
+                                                 cfg.vocab_size),
+                       gen_len=(gen_override or {}).get(r.rid, r.gen_len),
+                       arrival=r.arrival)
+            for r in trace]
+
+
+# ---------------------------------------------------------------------------
+# arena-level behavior
+# ---------------------------------------------------------------------------
+
+
+def test_two_tenants_one_budget_views_are_consistent(train_profile):
+    cfg = get_config("qwen2-0.5b")
+    arena = SharedArena(1 << 32)
+    sv = arena.register_serving(paged_request_blocks(_trace(), cfg, 8))
+    tv = arena.register_training(train_profile, steps_per_round=2)
+    plan = arena.plan()
+    assert plan.feasible
+    assert sum(plan.reserves.values()) == plan.joint_peak
+    # each tenant's budget = whole budget minus retained minus the others
+    assert sv.budget == (1 << 32) - plan.retained_bytes - tv.reserve
+    assert tv.budget == (1 << 32) - plan.retained_bytes - sv.reserve
+    assert plan.joint_peak <= plan.standalone_sum   # sharing never costs peak
+    validate_plan(plan.profile, plan.plan)
+
+
+def test_training_steps_land_in_serving_valleys(train_profile):
+    """The scheduler must put fine-tune steps where decode load is lowest."""
+    cfg = get_config("qwen2-0.5b")
+    # requests 1..4 all live in the middle; steps 0..1 and the drain are idle
+    trace = [Request(rid=i + 1, prompt_len=64, gen_len=8, arrival=4)
+             for i in range(4)]
+    arena = SharedArena(1 << 32)
+    arena.register_serving(paged_request_blocks(trace, cfg, 8))
+    arena.register_training(train_profile, steps_per_round=2)
+    plan = arena.plan()
+    assert plan.schedule["training"] == [0, 1]      # the pre-arrival valley
+    # hiding in an empty valley: the tenants never co-exist in time, so the
+    # join costs nothing beyond the larger of the two standalone peaks
+    assert plan.joint_peak == max(plan.standalone["serving"],
+                                  plan.standalone["training"])
+
+
+def test_too_many_training_steps_is_an_error():
+    arena = SharedArena(1 << 32)
+    # serving round is 4 engine steps; 9 fine-tune steps cannot land in it
+    arena.register_serving(make_profile([(512, 0, 4)]))
+    arena.register_training(make_profile([(512, 0, 4)]), steps_per_round=9)
+    with pytest.raises(SharedArenaError, match="do not fit"):
+        arena.plan()
+
+
+def test_shrink_hook_resolves_evict_vs_share(train_profile):
+    """Over budget, the arena asks the remat search to shrink the step."""
+    cfg = get_config("qwen2-0.5b")
+    planner = MemoryPlanner()
+    # prompt-heavy, no decode growth: the serving load is flat at its peak
+    # for the whole (short) round, so there is no valley to hide in
+    sprof = paged_request_blocks(
+        [Request(rid=i + 1, prompt_len=120, gen_len=2, arrival=0)
+         for i in range(4)], cfg, 8)
+    serve_peak = best_fit(sprof).peak
+    train_peak = best_fit(train_profile).peak
+    budget = (train_profile.retained_bytes + serve_peak
+              + int(0.5 * train_peak))
+    arena = planner.plan_shared(hbm_budget=budget, serving_profile=sprof,
+                                training_profile=train_profile,
+                                train_steps=1, shrink="remat")
+    plan = arena.plan()
+    assert plan.shrink_rounds >= 1                  # eviction search engaged
+    assert plan.feasible
+    assert plan.joint_peak <= budget - plan.retained_bytes
+
+
+# ---------------------------------------------------------------------------
+# engine-level: concurrent serve + fine-tune smoke under one budget
+# ---------------------------------------------------------------------------
+
+
+def test_engine_admission_gated_by_shared_split(tiny_model, train_profile):
+    """max_feasible_batch still gates admission, now against the serving
+    tenant's share of the joint budget."""
+    cfg, model, params = tiny_model
+    acct = get_config("qwen2-0.5b")
+    trace = _trace(n=6, prompt=8, gen=4)
+    # budget sized so the serving share only admits a few concurrent requests
+    from repro.serving.pages import concurrency_bytes
+    one = concurrency_bytes(acct, trace, 8, batch=1)
+    shared = SharedArena(train_profile.retained_bytes
+                         + best_fit(train_profile).peak + 2 * one)
+    shared.register_training(train_profile, steps_per_round=1)
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=32,
+                      max_batch=6, page_tokens=8, accounting_cfg=acct,
+                      shared=shared)
+    assert eng.kv.tenant is not None                # pool joined the arena
+    assert eng.sched.cap < 6                        # the split bound admission
+    summary = eng.run(_live(cfg, trace))
+    assert summary["n_completed"] == 6
+    assert summary["max_concurrent"] <= eng.sched.cap
+
+
+def test_decode_overflow_replan_rebalances_without_corrupting_training(
+        tiny_model, train_profile):
+    """Live generations outgrow the profile -> §4.3 replan at the boundary;
+    the training tenant's plan must stay valid and its reserve accounted."""
+    cfg, model, params = tiny_model
+    acct = get_config("qwen2-0.5b")
+    trace = _trace(n=4, prompt=8, gen=4)
+    shared = SharedArena(1 << 32)
+    tv = shared.register_training(train_profile, steps_per_round=1)
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
+                      max_batch=4, page_tokens=8, accounting_cfg=acct,
+                      shared=shared)
+    train_standalone_before = tv.standalone_peak
+    summary = eng.run(_live(cfg, trace, gen_override={2: 24}))
+    assert summary["n_completed"] == 4
+    assert eng.kv.arena.stats()["n_reopt"] >= 1     # pool replanned...
+    assert shared.n_reopt >= 1                      # ...and the split followed
+    plan = shared.plan()
+    assert plan.feasible
+    # training tenant unharmed: same standalone demand, non-negative reserve,
+    # still-valid joint packing
+    assert tv.standalone_peak == train_standalone_before
+    assert plan.reserves["training"] >= 0
+    validate_plan(plan.profile, plan.plan)
+    assert sum(plan.reserves.values()) == plan.joint_peak
+    # admission cap was re-derived from the post-replan serving share
+    from repro.serving.pages import max_concurrency
+    assert eng.sched.cap == max(1, min(4, max_concurrency(
+        acct, trace, eng.kv.page_tokens, eng.kv.tenant.budget)))
+
+
+def test_plan_remat_policy_targets_shared_split(tiny_model, train_profile):
+    """--share-hbm path: the remat target is the training share of the
+    split, and the post-eviction step is staged back to the arena."""
+    cfg, model, _ = tiny_model
+    acct = get_config("qwen2-0.5b")
+    sprof = paged_request_blocks(_trace(n=6, prompt=32, gen=24), acct, 8)
+    serve_peak = best_fit(sprof).peak
+    train_peak = best_fit(train_profile).peak
+    budget = (train_profile.retained_bytes + serve_peak
+              + int(0.4 * train_peak))
+    shared = SharedArena(budget)
+    shared.register_serving(sprof)
+    tv = shared.register_training(train_profile, steps_per_round=1)
+    bsds = {"tokens": jax.ShapeDtypeStruct((2, 17), jnp.int32)}
+    policy, ev = plan_remat_policy(model, bsds, profile=train_profile,
+                                   shared=tv)
+    assert ev.target_peak == pytest.approx(budget - train_profile.retained_bytes
+                                           - serve_peak)
+    assert len(ev.evictions) > 0                    # had to evict to fit
+    plan = shared.plan()
+    assert shared.n_reopt >= 1                      # staged + rebalanced
+    validate_plan(plan.profile, plan.plan)
