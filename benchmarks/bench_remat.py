@@ -76,6 +76,9 @@ def _bench_config(arch: str, overrides: dict, *, seq: int, batch: int,
             jax.block_until_ready(step(params, {"tokens": tokens}))
         times[mode] = (time.perf_counter() - t0) / timing_iters
 
+    # plan-vs-actual: the search promised ev.peak on its transformed profile;
+    # the re-traced (verified) jaxpr is what the policy actually achieves
+    target = int(TARGET_RATIO * peaks["none"])
     rec = {
         "arch": arch, "batch": batch, "seq": seq,
         "n_layers": cfg.n_layers,
@@ -86,6 +89,14 @@ def _bench_config(arch: str, overrides: dict, *, seq: int, batch: int,
         "full_vs_none": peaks["full"] / peaks["none"],
         "eviction": ev.summary(),
         "policy": policy.describe(),
+        "drift": {
+            "target_peak": target,
+            "search_peak": ev.peak,
+            "achieved_peak": peaks["planned"],
+            "achieved_vs_search": peaks["planned"] / ev.peak
+            if ev.peak else 0.0,
+            "reached_target": peaks["planned"] <= target,
+        },
     }
     derived = (f"none_MB={peaks['none'] / 1e6:.1f};"
                f"full_MB={peaks['full'] / 1e6:.1f};"
@@ -146,7 +157,9 @@ def main(quick: bool = False):
     print(f"remat/{brow[0]},{brow[1]:.1f},{brow[2]}")
     with open(OUT_JSON, "w") as f:
         json.dump({"target_ratio": TARGET_RATIO, "configs": records,
-                   "max_feasible_batch": brec}, f, indent=2)
+                   "max_feasible_batch": brec,
+                   "drift": {r["arch"]: r["drift"] for r in records}},
+                  f, indent=2)
     print(f"# wrote {OUT_JSON}")
 
 

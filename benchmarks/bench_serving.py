@@ -25,6 +25,7 @@ from repro.serving import plan_pool
 from repro.serving.pages import choose_page_tokens
 
 OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+TRACE_JSON = os.environ.get("TRACE_SERVING_JSON", "TRACE_serving.json")
 
 
 def synth_trace(n: int, seed: int = 0, prompt_hi: int = 4096,
@@ -83,11 +84,16 @@ def planner_rows(quick: bool = False):
 
 def engine_row(quick: bool = False):
     """Drive the real tiny model through the new engine; compare sustained
-    concurrency against the old engine's slot count on the same trace."""
+    concurrency against the old engine's slot count on the same trace.
+
+    The run is traced (``TRACE_serving.json``, Perfetto-loadable) and a
+    ``DriftMonitor`` diffs the planned pool profile against what the arena
+    actually observed — peak ratio, fragmentation, and per-cause replans."""
     import jax
 
     from repro.launch.train import reduced_config
     from repro.models import Transformer
+    from repro.obs import ChromeTraceBuilder, DriftMonitor, Tracer, use_tracer
     from repro.serving import GenRequest, ServeEngine
 
     old_slots = 4
@@ -99,13 +105,25 @@ def engine_row(quick: bool = False):
              for i in range(n_req)]
     eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
                       max_batch=2 * old_slots, page_tokens=8)
+    # live traffic outgrows the profiled lengths (deterministic jitter), so
+    # the drift section measures a real plan-vs-actual gap with replans
+    rng = random.Random(1)
     live = [GenRequest(rid=r.rid,
                        prompt=jax.random.randint(jax.random.PRNGKey(r.rid),
                                                  (r.prompt_len,), 0,
                                                  cfg.vocab_size),
-                       gen_len=r.gen_len, arrival=r.arrival)
+                       gen_len=max(2, r.gen_len + rng.randint(0, 16)),
+                       arrival=r.arrival)
             for r in trace]
-    s = eng.run(live)
+    tracer = Tracer()
+    with use_tracer(tracer):
+        s = eng.run(live)
+    drift = DriftMonitor(eng.kv.plan.profile)
+    drift.observe_arena(eng.kv.arena)
+    tb = ChromeTraceBuilder()
+    tb.add_events(tracer.events())
+    tb.add_plan("kv-pool", eng.kv.plan.profile)
+    tb.write(TRACE_JSON)
     rec = {
         "n_requests": n_req,
         "tokens_per_s": s["tokens_per_s"],
@@ -117,6 +135,8 @@ def engine_row(quick: bool = False):
         "n_preemptions": s["n_preemptions"],
         "n_reopt": s["kv_n_reopt"],
         "ttft_steps_mean": s["ttft_steps_mean"],
+        "drift": drift.report(),
+        "replan_causes": dict(eng.kv.arena.replan_causes),
     }
     derived = (f"tok_per_s={s['tokens_per_s']:.1f};"
                f"pool_MB={s['kv_pool_bytes'] / 1e6:.3f};"
@@ -134,8 +154,10 @@ def main(quick: bool = False):
     erow, erec = engine_row(quick)
     print(f"serve/{erow[0]},{erow[1]:.3f},{erow[2]}")
     with open(OUT_JSON, "w") as f:
-        json.dump({"planner": records, "engine": erec}, f, indent=2)
-    print(f"# wrote {OUT_JSON}")
+        json.dump({"planner": records, "engine": erec,
+                   "drift": erec["drift"],
+                   "replan_causes": erec["replan_causes"]}, f, indent=2)
+    print(f"# wrote {OUT_JSON} and {TRACE_JSON}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ import json
 import os
 
 OUT_JSON = os.environ.get("BENCH_UNIFIED_JSON", "BENCH_unified.json")
+TRACE_JSON = os.environ.get("TRACE_UNIFIED_JSON", "TRACE_unified.json")
 RATIO_GATE = 0.9
 
 
@@ -44,10 +45,14 @@ def _training_profile(*, seq: int, batch: int):
 def main(quick: bool = False):
     from repro.configs import get_config
     from repro.core import MemoryPlanner
+    from repro.obs import ChromeTraceBuilder, DriftMonitor, Tracer
+    from repro.obs import disable as trace_disable
+    from repro.obs import enable as trace_enable
     from repro.runtime.serve_lib import synth_trace
     from repro.serving.pages import plan_pool
 
     print("# Unified: name,us_per_call,derived")
+    tracer = trace_enable(Tracer())
     n_req, train_steps = (12, 4) if quick else (24, 6)
     seq, batch = (64, 4) if quick else (128, 4)
 
@@ -94,6 +99,31 @@ def main(quick: bool = False):
                 f"feasible={tplan.feasible};shrink_rounds={tplan.shrink_rounds}")
     print(f"unified/tight/qwen2-0.5b,0.0,{tderived}")
 
+    # boundary rebalance: the tight arena sees the paced (observed) serving
+    # profile replace the dense one it planned for, and replans the split
+    tight.request_replan("serving", pool_plan.profile,
+                         cause="boundary-rebalance")
+    tight.reset_round()
+
+    # drift: the plan was sized from the paced sample trace; dense all-at-
+    # once traffic is what actually arrived.  Same rectangles, worse valleys.
+    drift = DriftMonitor(pool_plan.profile)
+    drift.observe(dense_plan.profile, label="dense-traffic")
+    drift_rep = drift.report()
+    replan_causes = dict(arena.replan_causes)
+    for k, v in tight.replan_causes.items():
+        replan_causes[k] = replan_causes.get(k, 0) + v
+    print(f"unified/drift/qwen2-0.5b,0.0,"
+          f"peak_ratio={drift_rep['peak_ratio']:.3f};"
+          f"replans={sum(replan_causes.values())};"
+          f"causes={replan_causes}")
+
+    trace_disable()
+    tb = ChromeTraceBuilder()
+    tb.add_events(tracer.events())
+    tb.add_plan("joint", plan.profile, plan=plan.plan)
+    tb.write(TRACE_JSON)
+
     with open(OUT_JSON, "w") as f:
         json.dump({
             "arch": "qwen2-0.5b",
@@ -116,8 +146,10 @@ def main(quick: bool = False):
                              "feasible": tplan.feasible,
                              "shrink_rounds": tplan.shrink_rounds,
                              "reserves": dict(tplan.reserves)},
+            "drift": drift_rep,
+            "replan_causes": replan_causes,
         }, f, indent=2)
-    print(f"# wrote {OUT_JSON}")
+    print(f"# wrote {OUT_JSON} and {TRACE_JSON}")
     if ratio > RATIO_GATE:
         raise AssertionError(
             f"unified sharing win below gate: joint/sum={ratio:.3f} > {RATIO_GATE}")

@@ -1,0 +1,91 @@
+"""Warn-only bench-regression gate.
+
+Diffs the key memory/packing metrics of a fresh quick bench run against the
+committed baselines in ``benchmarks/baselines/`` and prints GitHub-Actions
+``::warning::`` annotations for anything that moved the wrong way beyond
+tolerance.  Always exits 0 — the trajectory is surfaced, not enforced; a
+deliberate trade-off lands by refreshing the baseline in the same PR:
+
+  BENCH_QUICK=1 python benchmarks/run.py --quick
+  cp BENCH_serving.json BENCH_remat.json BENCH_unified.json benchmarks/baselines/
+
+Only deterministic metrics are compared (packed peaks, ratios, counts) —
+wall-clock throughput numbers are machine-dependent and excluded.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+# (file, dotted path, direction, relative tolerance)
+#   higher_is_worse: warn when current > baseline * (1 + tol)
+#   lower_is_worse:  warn when current < baseline * (1 - tol)
+KEY_METRICS = [
+    ("BENCH_serving.json", "planner.0.paged_dsa_peak", "higher_is_worse", 0.02),
+    ("BENCH_serving.json", "planner.0.saving_vs_slab", "lower_is_worse", 0.05),
+    ("BENCH_serving.json", "engine.paged_pool_bytes", "higher_is_worse", 0.02),
+    ("BENCH_serving.json", "engine.max_concurrent", "lower_is_worse", 0.0),
+    ("BENCH_serving.json", "engine.tokens", "lower_is_worse", 0.0),
+    ("BENCH_serving.json", "drift.peak_ratio", "higher_is_worse", 0.05),
+    ("BENCH_remat.json", "configs.0.planned_vs_none", "higher_is_worse", 0.05),
+    ("BENCH_remat.json", "configs.0.eviction.n_evicted", "higher_is_worse", 0.25),
+    ("BENCH_remat.json", "max_feasible_batch.max_batch_remat",
+     "lower_is_worse", 0.0),
+    ("BENCH_unified.json", "ratio_joint_vs_sum", "higher_is_worse", 0.05),
+    ("BENCH_unified.json", "sharing_win_bytes", "lower_is_worse", 0.05),
+    ("BENCH_unified.json", "tight_budget.shrink_rounds", "higher_is_worse", 0.5),
+]
+
+
+def lookup(obj, dotted: str):
+    for part in dotted.split("."):
+        if isinstance(obj, list):
+            obj = obj[int(part)]
+        elif isinstance(obj, dict):
+            obj = obj[part]
+        else:
+            raise KeyError(dotted)
+    if not isinstance(obj, (int, float)) or isinstance(obj, bool):
+        raise KeyError(f"{dotted}: not numeric ({obj!r})")
+    return float(obj)
+
+
+def main() -> int:
+    cur_dir = sys.argv[1] if len(sys.argv) > 1 else "."
+    n_checked = n_warn = 0
+    for fname, path, direction, tol in KEY_METRICS:
+        base_path = os.path.join(BASELINE_DIR, fname)
+        cur_path = os.path.join(cur_dir, fname)
+        try:
+            with open(base_path) as f:
+                base = lookup(json.load(f), path)
+            with open(cur_path) as f:
+                cur = lookup(json.load(f), path)
+        except (OSError, KeyError, ValueError, IndexError) as e:
+            print(f"::warning::bench-regression: cannot compare "
+                  f"{fname}:{path} ({e})")
+            continue
+        n_checked += 1
+        if direction == "higher_is_worse":
+            bad = cur > base * (1 + tol)
+        else:
+            bad = cur < base * (1 - tol)
+        arrow = "up" if cur > base else "down"
+        if bad:
+            n_warn += 1
+            print(f"::warning::bench-regression: {fname}:{path} moved {arrow} "
+                  f"{base:g} -> {cur:g} ({direction}, tol {tol:.0%}); "
+                  f"refresh benchmarks/baselines/ if intended")
+        else:
+            print(f"ok {fname}:{path} {base:g} -> {cur:g}")
+    print(f"# checked {n_checked}/{len(KEY_METRICS)} metrics, "
+          f"{n_warn} regressions (warn-only)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,10 +15,39 @@ Env: BENCH_QUICK=1 (or --quick) for the fast variant (used by CI/tests).
 from __future__ import annotations
 
 import argparse
+import glob
+import json
 import os
 import sys
 import time
 import traceback
+
+SUMMARY_JSON = os.environ.get("BENCH_SUMMARY_JSON", "BENCH_summary.json")
+
+
+def write_summary(quick: bool, failures: int) -> None:
+    """Consolidate the per-section BENCH_*.json files (plus the list of
+    emitted trace artifacts) into one ``BENCH_summary.json``."""
+    sections = {}
+    for path in sorted(glob.glob("BENCH_*.json")):
+        if os.path.abspath(path) == os.path.abspath(SUMMARY_JSON):
+            continue
+        key = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                sections[key] = json.load(f)
+        except (OSError, ValueError) as e:
+            sections[key] = {"error": str(e)}
+    summary = {
+        "quick": quick,
+        "failures": failures,
+        "sections": sections,
+        "traces": sorted(glob.glob("TRACE_*.json")),
+    }
+    with open(SUMMARY_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"# wrote {SUMMARY_JSON} ({len(sections)} sections, "
+          f"{len(summary['traces'])} traces)")
 
 
 def _import_benches():
@@ -84,6 +113,7 @@ def main() -> None:
         except Exception:
             failures += 1
             traceback.print_exc()
+    write_summary(quick, failures)
     if failures:
         raise SystemExit(1)
 

@@ -28,6 +28,7 @@ from .dsa import AllocationPlan, validate_plan
 from .events import DEFAULT_ALIGNMENT, Block, MemoryProfile, align
 from .pool import PoolAllocator
 from .profiler import MemoryRecorder
+from ..obs.trace import get_tracer
 
 
 class ArenaAllocator:
@@ -77,6 +78,16 @@ class ArenaAllocator:
         self._hint_to_sig: dict = {}
         self._hint = None
         self.max_peak = self.plan.peak
+        # §4.3 accounting for the drift monitor: why each replan was asked
+        self.n_replan_requests = 0
+        self.replan_causes: dict[str, int] = {}
+
+    def _record_cause(self, cause: str) -> None:
+        self.n_replan_requests += 1
+        self.replan_causes[cause] = self.replan_causes.get(cause, 0) + 1
+        t = get_tracer()
+        if t is not None:
+            t.instant("replan-request", "arena", track="arena", cause=cause)
 
     @staticmethod
     def _signature(profile: MemoryProfile):
@@ -85,8 +96,11 @@ class ArenaAllocator:
     # -- §4.2: the O(1) hot path -------------------------------------------------
     def alloc(self, size: int) -> int:
         """Return the absolute address for the next hot-region request."""
+        t = get_tracer()
         if self._interrupted:
             self.n_fallback += 1
+            if t is not None:
+                t.instant("alloc-fallback", "arena", track="arena", size=size)
             return (self.base + self.plan.peak + (1 << 40) +
                     self._fallback.malloc(("nh", self.n_fallback), size))
         size = align(size, self.alignment)
@@ -99,6 +113,8 @@ class ArenaAllocator:
             blk = self._by_bid[bid]
         if blk is None or size > blk.size:
             # novel/oversized block: overflow region now, replan at boundary
+            if not self._dirty:
+                self._record_cause("novel-block")
             self._dirty = True
             addr = (self.base + self.plan.peak +
                     self._overflow.malloc(("ov", sid), size))
@@ -106,9 +122,15 @@ class ArenaAllocator:
             self._addr_to_shadow[addr] = (sid, ("ov", sid))
             self.max_peak = max(self.max_peak,
                                 self.plan.peak + self._overflow.peak)
+            if t is not None:
+                t.instant("alloc-overflow", "arena", track="arena", bid=bid,
+                          size=size, addr=addr)
             return addr
         addr = self.base + self.plan.offsets[bid]
         self._addr_to_shadow[addr] = (sid, None)
+        if t is not None:
+            t.instant("alloc", "arena", track="arena", bid=bid, size=size,
+                      addr=addr)
         return addr
 
     def free(self, addr: int) -> None:
@@ -118,6 +140,9 @@ class ArenaAllocator:
         entry = self._addr_to_shadow.pop(addr, None)
         if entry is None:
             return
+        t = get_tracer()
+        if t is not None:
+            t.instant("free", "arena", track="arena", addr=addr)
         sid, ov_handle = entry
         self._shadow.on_free(sid)
         if ov_handle is not None:
@@ -154,20 +179,33 @@ class ArenaAllocator:
     def peak(self) -> int:
         return self.plan.peak
 
-    def request_replan(self) -> None:
+    def request_replan(self, cause: str = "requested") -> None:
         """Force a §4.3 boundary replan from the shadow-observed stream at the
         next ``reset_iteration()`` (callers flag observed memory pressure the
-        lambda stream itself cannot see, e.g. serving preemption)."""
+        lambda stream itself cannot see, e.g. serving preemption).
+
+        ``cause`` is a machine-readable tag ("decode-outrun", "over-budget",
+        "boundary-rebalance", ...) counted in ``replan_causes`` and consumed
+        by the drift monitor."""
+        self._record_cause(cause)
         self._dirty = True
 
     # -- §4.3: interrupt/resume ----------------------------------------------------
     def interrupt(self) -> None:
         self._interrupted += 1
+        t = get_tracer()
+        if t is not None:
+            t.instant("interrupt", "arena", track="arena",
+                      depth=self._interrupted)
 
     def resume(self) -> None:
         if not self._interrupted:
             raise RuntimeError("resume() without interrupt()")
         self._interrupted -= 1
+        t = get_tracer()
+        if t is not None:
+            t.instant("resume", "arena", track="arena",
+                      depth=self._interrupted)
 
     @contextmanager
     def non_hot(self):
@@ -181,6 +219,7 @@ class ArenaAllocator:
     def _reoptimize(self, bid: int, size: int) -> None:
         """Immediate replan for a known block observed at a larger size."""
         t0 = _time.perf_counter()
+        self._record_cause("oversize-immediate")
         old = self._by_bid[bid]
         blocks = [b if b.bid != bid else
                   Block(bid=bid, size=size, start=old.start, end=old.end,
@@ -224,6 +263,7 @@ class ArenaAllocator:
         self.reopt_seconds += _time.perf_counter() - t0
 
     def _install(self, profile: MemoryProfile) -> None:
+        old_peak = self.plan.peak
         self.profile = profile
         self.plan = self._solver(profile)
         validate_plan(profile, self.plan)
@@ -231,6 +271,11 @@ class ArenaAllocator:
         self._lam0 = min((b.bid for b in profile.blocks), default=1)
         self.n_reopt += 1
         self.max_peak = max(self.max_peak, self.plan.peak)
+        t = get_tracer()
+        if t is not None:
+            t.instant("replan", "arena", track="arena", n_reopt=self.n_reopt,
+                      old_peak=old_peak, new_peak=self.plan.peak,
+                      n_blocks=profile.n)
 
     def stats(self) -> dict:
         return {
@@ -244,4 +289,6 @@ class ArenaAllocator:
             "fallback_peak": self._fallback.peak,
             "overflow_peak": self._overflow.peak,
             "plans_cached": len(self._plan_cache),
+            "n_replan_requests": self.n_replan_requests,
+            "replan_causes": dict(self.replan_causes),
         }

@@ -75,6 +75,18 @@ class MemoryRecorder:
         finally:
             self.resume()
 
+    def stats(self) -> dict:
+        """Recorder counters, including events dropped while interrupted
+        (``skipped`` was previously recorded but never surfaced)."""
+        return {
+            "clock": self.y,
+            "next_bid": self.lam,
+            "n_open": len(self._open),
+            "n_closed": len(self._closed),
+            "skipped": self.skipped,
+            "interrupt_depth": self._interrupted,
+        }
+
     # -- finish -------------------------------------------------------------------
     def finish(self, meta: dict | None = None) -> MemoryProfile:
         """Close any still-open blocks at the current clock and emit the profile."""

@@ -37,6 +37,7 @@ from typing import Callable, Optional
 from .bestfit import best_fit
 from .dsa import AllocationPlan, validate_plan
 from .events import Block, MemoryProfile
+from ..obs.trace import get_tracer
 
 # Above this many joint rectangles each training instance is compressed to a
 # single peak-sized envelope block (best-fit is ~quadratic).
@@ -95,11 +96,14 @@ class TenantView:
         others = sum(r for n, r in p.reserves.items() if n != self.name)
         return max(0, self._arena.hbm_budget - p.retained_bytes - others)
 
-    def request_replan(self, profile: Optional[MemoryProfile] = None) -> None:
+    def request_replan(self, profile: Optional[MemoryProfile] = None,
+                       cause: str = "boundary-rebalance") -> None:
         """Flag observed drift (decode outran the profile / training peak
         shifted); optionally stage the newly observed rectangles.  Applied
-        at the next ``reset_round()`` boundary — the paper's §4.3."""
-        self._arena.request_replan(self.name, profile)
+        at the next ``reset_round()`` boundary — the paper's §4.3.
+        ``cause`` feeds the per-cause replan counters the drift monitor
+        reports."""
+        self._arena.request_replan(self.name, profile, cause=cause)
 
     def stats(self) -> dict:
         p = self._arena.plan()
@@ -160,6 +164,14 @@ class SharedArena:
         self._plan: Optional[SharedPlan] = None
         self._dirty = False
         self.n_reopt = 0
+        self.replan_causes: dict[str, int] = {}
+
+    def _record_cause(self, cause: str, **trace_args) -> None:
+        self.replan_causes[cause] = self.replan_causes.get(cause, 0) + 1
+        t = get_tracer()
+        if t is not None:
+            t.instant("replan-request", "unified", track="arena",
+                      cause=cause, **trace_args)
 
     # -- registration ----------------------------------------------------------
     def _register(self, t: _Tenant) -> TenantView:
@@ -167,6 +179,11 @@ class SharedArena:
             raise SharedArenaError(f"tenant {t.name!r} already registered")
         self._tenants[t.name] = t
         self._plan = None
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant("tenant-register", "unified", track=t.name,
+                       kind=t.kind, n_blocks=t.profile.n,
+                       steps_per_round=t.steps_per_round)
         return TenantView(self, t.name)
 
     def register_serving(self, profile: MemoryProfile,
@@ -195,10 +212,12 @@ class SharedArena:
 
     # -- §4.3 boundary replanning ----------------------------------------------
     def request_replan(self, name: str,
-                       profile: Optional[MemoryProfile] = None) -> None:
+                       profile: Optional[MemoryProfile] = None,
+                       cause: str = "boundary-rebalance") -> None:
         t = self._tenants[name]
         if profile is not None:
             t.staged = profile
+        self._record_cause(cause, tenant=name, staged=profile is not None)
         self._dirty = True
 
     def reset_round(self) -> bool:
@@ -206,6 +225,7 @@ class SharedArena:
         Returns True if a replan happened."""
         if not self._dirty:
             return False
+        old_peak = self._plan.joint_peak if self._plan is not None else 0
         for t in self._tenants.values():
             if t.staged is not None:
                 t.profile = t.staged
@@ -214,6 +234,12 @@ class SharedArena:
         self._plan = None
         self.plan()
         self.n_reopt += 1
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant("boundary-rebalance", "unified", track="arena",
+                       n_reopt=self.n_reopt, old_joint_peak=old_peak,
+                       new_joint_peak=self._plan.joint_peak,
+                       reserves=dict(self._plan.reserves))
         return True
 
     # -- joint planning ----------------------------------------------------------
@@ -277,6 +303,7 @@ class SharedArena:
 
         shrink_rounds = 0
         target: Optional[int] = None
+        tr = get_tracer()
         while True:
             plan_obj = self._pack_union()
             overshoot = plan_obj.joint_peak - packing_budget
@@ -291,6 +318,8 @@ class SharedArena:
                       else target - overshoot)
             if target <= 0 or shrink_rounds >= self.max_shrink_rounds:
                 break
+            self._record_cause("over-budget", joint_peak=plan_obj.joint_peak,
+                               budget=packing_budget)
             shrunk = False
             for t in self._training_tenants():
                 if t.shrink is None:
@@ -303,10 +332,21 @@ class SharedArena:
             if not shrunk:
                 break
             shrink_rounds += 1
+            if tr is not None:
+                tr.instant("shrink-round", "unified", track="arena",
+                           round=shrink_rounds, target=target,
+                           joint_peak=plan_obj.joint_peak,
+                           overshoot=overshoot)
         plan_obj.retained_bytes = retained
         plan_obj.feasible = plan_obj.joint_peak <= packing_budget
         plan_obj.shrink_rounds = shrink_rounds
         self._plan = plan_obj
+        if tr is not None:
+            tr.instant("joint-plan", "unified", track="arena",
+                       joint_peak=plan_obj.joint_peak,
+                       feasible=plan_obj.feasible,
+                       shrink_rounds=shrink_rounds,
+                       standalone_sum=plan_obj.standalone_sum)
         return plan_obj
 
     def _pack_union(self) -> SharedPlan:
@@ -342,10 +382,15 @@ class SharedArena:
             for t in self._training_tenants())
         envelope = (len(joint_blocks) + n_train_blocks) > MAX_JOINT_BLOCKS
 
+        tr = get_tracer()
         for t in self._training_tenants():
             standalone[t.name] = self._solo(t)
             phases = self._schedule_instances(t, window, load)
             schedule[t.name] = phases
+            if tr is not None:
+                tr.instant("valley-schedule", "unified", track=t.name,
+                           phases=list(phases), window=window,
+                           load_at_phases=[load[p] for p in phases])
             step_end = max(1, t.profile.clock_end or
                            max((b.end for b in t.profile.blocks), default=1))
             for k, phase in enumerate(phases):
@@ -396,4 +441,5 @@ class SharedArena:
     def stats(self) -> dict:
         p = self.plan()
         return {"hbm_budget": self.hbm_budget, "n_tenants": len(self._tenants),
-                "n_reopt": self.n_reopt, **p.summary()}
+                "n_reopt": self.n_reopt,
+                "replan_causes": dict(self.replan_causes), **p.summary()}

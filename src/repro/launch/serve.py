@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..core import MemoryPlanner, SharedArena, profile_fn
 from ..models import Transformer
+from ..obs import ChromeTraceBuilder, DriftMonitor, Tracer, use_tracer
 from ..runtime.serve_lib import ServingArena, synth_trace
 from ..serving import GenRequest, ServeEngine
 from .train import reduced_config
@@ -49,6 +50,11 @@ def main() -> None:
     ap.add_argument("--train-steps", type=int, default=4,
                     help="--share-hbm: fine-tune steps per serving round")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(runtime events + packed-plan rectangles)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics registry as Prometheus text")
     args = ap.parse_args()
 
     cfg, seq, batch = reduced_config(args.arch, args.preset)
@@ -112,7 +118,29 @@ def main() -> None:
                        gen_len=max(2, r.gen_len + rng.randint(-2, 6)),
                        arrival=r.arrival)
             for r in trace]
-    summary = eng.run(live)
+    tracer = Tracer() if args.trace else None
+    with use_tracer(tracer):
+        summary = eng.run(live)
+    if tracer is not None:
+        tb = ChromeTraceBuilder()
+        tb.add_events(tracer.events())
+        tb.add_plan("kv-pool", eng.kv.plan.profile)
+        if shared is not None:
+            jp = shared.plan()
+            tb.add_plan("joint", jp.profile, plan=jp.plan)
+        tb.write(args.trace)
+        print(f"[trace] {len(tracer.events())} events "
+              f"(dropped {tracer.n_dropped}) -> {args.trace}")
+    drift = DriftMonitor(eng.kv.plan.profile)
+    drift.observe_arena(eng.kv.arena)
+    d = drift.report()
+    print(f"[drift] planned={d['planned_peak'] / 1e6:.2f}MB "
+          f"observed={d['observed_peak'] / 1e6:.2f}MB "
+          f"peak_ratio={d['peak_ratio']:.2f} "
+          f"frag={d['fragmentation']:.2f} "
+          f"replans={d['n_replans']} causes={d['replan_causes']}")
+    if args.metrics:
+        print(eng.metrics.registry.to_prometheus_text(), end="")
     ttft = summary["ttft_steps_mean"]
     print(f"completed {summary['n_completed']}/{summary['n_requests']} "
           f"requests, {summary['tokens']} tokens in {summary['wall_s']:.1f}s "

@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from ..checkpoint import Checkpointer, config_hash
 from ..configs import get_config
 from ..core import MemoryPlanner, SharedArena, profile_fn
+from ..obs import ChromeTraceBuilder, MetricsRegistry, Tracer
+from ..obs.trace import disable as trace_disable
+from ..obs.trace import enable as trace_enable
 from ..data import DataConfig, SyntheticPipeline
 from ..models import RunOpts, Transformer
 from ..optim.adamw import AdamWConfig
@@ -91,7 +94,17 @@ def main() -> None:
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the planning "
+                         "phase (remat search rounds, shared-arena events) "
+                         "plus the packed activation plan")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print planner metrics as Prometheus text")
     args = ap.parse_args()
+
+    tracer = Tracer() if args.trace else None
+    if tracer is not None:
+        trace_enable(tracer)
 
     cfg, seq, batch = reduced_config(args.arch, args.preset)
     model = Transformer(cfg, RunOpts())
@@ -197,6 +210,36 @@ def main() -> None:
     dt = time.time() - t_start
     print(f"done: {remaining} steps in {dt:.1f}s "
           f"final_loss={ctl.losses[-1]:.4f} stragglers={mon.stragglers()}")
+
+    if tracer is not None:
+        trace_disable()
+        tb = ChromeTraceBuilder()
+        tb.add_events(tracer.events())
+        tb.add_plan("activations", prof, plan=rep.plan)
+        if tview is not None:
+            jp = tview.shared.plan()
+            tb.add_plan("joint", jp.profile, plan=jp.plan)
+        tb.write(args.trace)
+        print(f"[trace] {len(tracer.events())} events "
+              f"(dropped {tracer.n_dropped}) -> {args.trace}")
+    if args.metrics:
+        reg = MetricsRegistry()
+        reg.gauge("train_plan_peak_bytes",
+                  "DSA-packed activation peak").set(rep.plan.peak)
+        reg.gauge("train_pool_peak_bytes",
+                  "pool-allocator baseline peak").set(
+                      rep.baselines["pool_peak"])
+        reg.gauge("train_retained_bytes",
+                  "params+opt state held across the step").set(
+                      prof.retained_bytes)
+        reg.counter("train_steps_total", "steps run").set(args.steps)
+        if args.remat == "planned":
+            s = ev.summary()
+            reg.gauge("train_remat_peak_bytes",
+                      "packed peak after planned evictions").set(s["peak"])
+            reg.counter("train_remat_evictions_total",
+                        "blocks evicted by the search").set(s["n_evicted"])
+        print(reg.to_prometheus_text(), end="")
 
 
 if __name__ == "__main__":

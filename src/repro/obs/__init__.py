@@ -1,0 +1,30 @@
+"""repro.obs — unified tracing, metrics, and plan-vs-actual drift monitoring.
+
+The observability layer the planner stack reports through:
+
+  - trace:   ring-buffered typed structured-event tracer (``Tracer``,
+             ``enable``/``disable``/``get_tracer``); ``ArenaAllocator``,
+             ``ServeEngine``/``Scheduler``, ``remat.search`` and
+             ``SharedArena`` emit here when a tracer is active;
+  - export:  Chrome-trace/Perfetto JSON (``ChromeTraceBuilder``) rendering
+             both runtime timelines and address×time packing rectangles;
+  - metrics: ``MetricsRegistry`` (counters/gauges/histograms) with
+             Prometheus-text and JSON exporters; ``ServeMetrics`` stores its
+             counters here; ``ManualClock`` for deterministic tests;
+  - drift:   ``DriftMonitor`` — planned profile vs observed events: peak
+             ratio, shape drift, fragmentation, headroom, per-cause replan
+             counters.
+"""
+from .drift import DriftMonitor, live_curve
+from .export import (ChromeTraceBuilder, load_chrome_trace, plan_rectangles,
+                     validate_chrome_trace)
+from .metrics import (Counter, Gauge, Histogram, ManualClock, MetricsRegistry)
+from .trace import (TraceEvent, Tracer, disable, enable, get_tracer,
+                    use_tracer)
+
+__all__ = [
+    "ChromeTraceBuilder", "Counter", "DriftMonitor", "Gauge", "Histogram",
+    "ManualClock", "MetricsRegistry", "TraceEvent", "Tracer", "disable",
+    "enable", "get_tracer", "live_curve", "load_chrome_trace",
+    "plan_rectangles", "use_tracer", "validate_chrome_trace",
+]

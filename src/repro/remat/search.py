@@ -30,6 +30,7 @@ from ..core.events import MemoryProfile
 # (core/mip.py) provably optimize the same objective.
 from ..core.evict import MIN_EVICT_LIFETIME as _MIN_EVICT_LIFETIME
 from ..core.evict import evict_block
+from ..obs.trace import get_tracer
 from .cost_model import CostModel
 
 
@@ -151,6 +152,11 @@ def plan_evictions(profile: MemoryProfile,
     if price_mode != "auto":     # re-rank by area per *delivered* cost
         pool.sort(key=lambda c: c.hbm_area / max(cand_cost(c), 1e-12),
                   reverse=True)
+    tr = get_tracer()
+    if tr is not None:
+        tr.instant("evict-search-start", "remat", track="search",
+                   baseline_peak=baseline_peak, target_peak=target_peak,
+                   n_candidates=len(pool))
     for cand in pool[:max_candidates]:
         if target_peak is not None and cur_peak <= target_peak:
             break
@@ -169,6 +175,11 @@ def plan_evictions(profile: MemoryProfile,
         for s in stubs:
             trial[s.bid] = s
         trial_plan = repack(trial)
+        if tr is not None:
+            # one evict -> repack -> verify round, accepted or rolled back
+            tr.instant("evict-trial", "remat", track="search", bid=b.bid,
+                       tag=b.tag, trial_peak=trial_plan.peak,
+                       cur_peak=cur_peak, accepted=trial_plan.peak < cur_peak)
         if trial_plan.peak >= cur_peak:      # replan says: no gain, roll back
             continue
         blocks = trial
@@ -183,8 +194,13 @@ def plan_evictions(profile: MemoryProfile,
                                   retained_bytes=profile.retained_bytes,
                                   clock_end=profile.clock_end,
                                   meta=dict(profile.meta, evicted=len(evictions)))
+    if tr is not None:
+        tr.instant("evict-search-done", "remat", track="search",
+                   n_evicted=len(evictions), n_tried=n_tried,
+                   baseline_peak=baseline_peak, peak=cur_peak)
     if view is not None and evictions:
-        view.request_replan(final_profile)   # §4.3: rebalance at the boundary
+        # §4.3: rebalance at the boundary
+        view.request_replan(final_profile, cause="evict-stage")
     return EvictionPlan(
         evictions=evictions,
         baseline_peak=baseline_peak,

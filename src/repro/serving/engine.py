@@ -23,6 +23,7 @@ from jax.sharding import Mesh
 from ..configs.base import ModelConfig
 from ..core.unified import SharedArena
 from ..models.transformer import Transformer
+from ..obs.trace import get_tracer
 from ..runtime.serve_lib import (Request, build_decode_step,
                                  build_prefill_step)
 from . import pages as pages_lib
@@ -41,7 +42,8 @@ class ServeEngine:
                  hbm_budget: Optional[int] = None, reserve_pages: int = 0,
                  accounting_cfg: Optional[ModelConfig] = None,
                  mesh: Optional[Mesh] = None,
-                 shared: Optional[SharedArena] = None):
+                 shared: Optional[SharedArena] = None,
+                 metrics: Optional[ServeMetrics] = None):
         """``accounting_cfg`` lets the page pool account at full-size arch
         scale while a reduced model executes (the launch-driver pattern).
 
@@ -68,7 +70,7 @@ class ServeEngine:
                                             self.kv.page_tokens, hbm_budget)
         self.sched = Scheduler(self.kv, max_batch=max_batch, policy=policy,
                                max_concurrency=cap, prefill_chunk=prefill_chunk)
-        self.metrics = ServeMetrics()
+        self.metrics = metrics if metrics is not None else ServeMetrics()
         self.prefill = build_prefill_step(model, mesh)
         self.decode = build_decode_step(model, mesh, donate=False)
         self.cache = model.init_cache(max_batch, max_len)
@@ -81,6 +83,11 @@ class ServeEngine:
         self.sched.enqueue(req)
         self.metrics.on_enqueue(req.rid, int(req.prompt.shape[0]),
                                 self.step_count)
+        t = get_tracer()
+        if t is not None:
+            t.instant("enqueue", "serving", track="queue", rid=req.rid,
+                      prompt_len=int(req.prompt.shape[0]),
+                      queue_depth=self.sched.queue_depth)
 
     @property
     def n_active(self) -> int:
@@ -88,6 +95,9 @@ class ServeEngine:
 
     # -- one engine step ------------------------------------------------------------
     def step(self) -> None:
+        t = get_tracer()
+        if t is not None:
+            t.set_step(self.step_count)
         for sr in self.sched.admit(self.step_count):
             self.metrics.on_admit(sr.rid, self.step_count)
         for sr in self.sched.prefill_batch():
@@ -114,6 +124,10 @@ class ServeEngine:
 
     def _model_prefill(self, sr: ScheduledRequest) -> None:
         self.metrics.n_prefill_tokens += sr.prompt_len
+        t = get_tracer()
+        if t is not None:
+            t.instant("prefill", "serving", track="engine", rid=sr.rid,
+                      prompt_len=sr.prompt_len, slot=sr.slot)
         logits, cache1 = self.prefill(self.params, {"tokens": sr.req.prompt[None, :]})
         self.cache = _merge_slot(self.cache, cache1, sr.slot, self.max_len)
         tok = jnp.argmax(logits[0]).astype(jnp.int32)
@@ -130,6 +144,10 @@ class ServeEngine:
         running = sorted(self.sched.running(), key=lambda s: s.slot)
         if not running:
             return
+        t = get_tracer()
+        if t is not None:
+            t.instant("decode", "serving", track="engine",
+                      n_running=len(running))
         logits, self.cache = self.decode(self.params, self.cache, self.tokens)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.tokens = nxt
@@ -159,6 +177,11 @@ class ServeEngine:
                 victim = self.sched.preempt_victim()
                 self.metrics.on_preempt(victim.rid,
                                         discarded_tokens=len(victim.out))
+                t = get_tracer()
+                if t is not None:
+                    t.instant("preempt", "serving", track="scheduler",
+                              rid=victim.rid, grower=sr.rid,
+                              discarded=len(victim.out))
                 if victim.rid == sr.rid:
                     return False
 
@@ -166,6 +189,10 @@ class ServeEngine:
         self.completed[sr.rid] = sr.out
         self.sched.finish(sr)
         self.metrics.on_finish(sr.rid, self.step_count)
+        t = get_tracer()
+        if t is not None:
+            t.instant("finish", "serving", track="engine", rid=sr.rid,
+                      n_tokens=len(sr.out), n_preempt=sr.n_preempt)
 
     # -- drive a whole trace ----------------------------------------------------------
     def run(self, requests: Sequence[GenRequest],

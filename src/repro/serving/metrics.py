@@ -3,12 +3,24 @@
 Step-indexed (deterministic, test-friendly) and wall-clock (throughput)
 views of the same run.  ``summary()`` is the machine-readable record the
 benchmarks dump into ``BENCH_serving.json``.
+
+Scalar counters live in a ``repro.obs.metrics.MetricsRegistry`` (pass one in
+to aggregate several engines into a single scrape; by default each
+ServeMetrics owns a private registry exposed as ``.registry``), so a run can
+be exported as Prometheus text without touching ``summary()``.  Wall time
+comes from an injectable ``clock`` callable — inject a
+``repro.obs.metrics.ManualClock`` to make throughput numbers reproducible.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from ..obs.metrics import MetricsRegistry
+
+TTFT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+QUEUE_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128)
 
 
 @dataclass
@@ -35,24 +47,80 @@ class RequestMetrics:
         return self.admit_step - self.enqueue_step
 
 
-@dataclass
 class ServeMetrics:
-    requests: dict[int, RequestMetrics] = field(default_factory=dict)
-    n_steps: int = 0
-    n_decode_tokens: int = 0        # tokens produced by batched decode steps
-    n_prefill_tokens: int = 0       # prompt tokens processed (chunked)
-    n_preemptions: int = 0
-    n_discarded_tokens: int = 0     # generated then thrown away by preemption
-    max_concurrent: int = 0
-    occupancy_samples: list = field(default_factory=list)
-    queue_depth_samples: list = field(default_factory=list)
-    _t0: float = field(default_factory=time.perf_counter)
-    _wall: float = 0.0
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._clock = clock if clock is not None else time.perf_counter
+        self.requests: dict[int, RequestMetrics] = {}
+        self.occupancy_samples: list[float] = []
+        self.queue_depth_samples: list[int] = []
+        self._t0 = self._clock()
+        self._wall = 0.0
+        r = self.registry
+        self._c_steps = r.counter(
+            "serve_steps_total", "engine steps run")
+        self._c_decode = r.counter(
+            "serve_decode_tokens_total", "tokens produced by batched decode")
+        self._c_prefill = r.counter(
+            "serve_prefill_tokens_total", "prompt tokens processed (chunked)")
+        self._c_preempt = r.counter(
+            "serve_preemptions_total", "preemptions on page-pool exhaustion")
+        self._c_discard = r.counter(
+            "serve_discarded_tokens_total",
+            "generated tokens discarded by preemption (recompute-on-resume)")
+        self._c_enqueued = r.counter(
+            "serve_requests_total", "requests enqueued")
+        self._c_completed = r.counter(
+            "serve_requests_completed_total", "requests finished")
+        self._g_concurrent = r.gauge(
+            "serve_concurrent", "active requests at the last step")
+        self._g_concurrent_max = r.gauge(
+            "serve_concurrent_max", "high-water mark of active requests")
+        self._g_occupancy = r.gauge(
+            "serve_page_occupancy", "page-pool occupancy at the last step")
+        self._h_ttft = r.histogram(
+            "serve_ttft_steps", "steps from enqueue to first token",
+            buckets=TTFT_BUCKETS)
+        self._h_queue = r.histogram(
+            "serve_queue_depth", "waiting-queue depth sampled per step",
+            buckets=QUEUE_BUCKETS)
+
+    # registry-backed views of the old dataclass fields (engine mutates
+    # ``n_prefill_tokens`` in place, hence the setter)
+    @property
+    def n_steps(self) -> int:
+        return int(self._c_steps.value)
+
+    @property
+    def n_decode_tokens(self) -> int:
+        return int(self._c_decode.value)
+
+    @property
+    def n_prefill_tokens(self) -> int:
+        return int(self._c_prefill.value)
+
+    @n_prefill_tokens.setter
+    def n_prefill_tokens(self, value: int) -> None:
+        self._c_prefill.set(value)
+
+    @property
+    def n_preemptions(self) -> int:
+        return int(self._c_preempt.value)
+
+    @property
+    def n_discarded_tokens(self) -> int:
+        return int(self._c_discard.value)
+
+    @property
+    def max_concurrent(self) -> int:
+        return int(self._g_concurrent_max.value)
 
     # -- recording ---------------------------------------------------------------
     def on_enqueue(self, rid: int, prompt_len: int, step: int) -> None:
         self.requests[rid] = RequestMetrics(rid=rid, prompt_len=prompt_len,
                                             enqueue_step=step)
+        self._c_enqueued.inc()
 
     def on_admit(self, rid: int, step: int) -> None:
         r = self.requests[rid]
@@ -63,28 +131,33 @@ class ServeMetrics:
         r = self.requests[rid]
         if r.first_token_step is None:
             r.first_token_step = step
+            self._h_ttft.observe(r.ttft_steps)
 
     def on_token(self, rid: int) -> None:
         self.requests[rid].n_generated += 1
-        self.n_decode_tokens += 1
+        self._c_decode.inc()
 
     def on_preempt(self, rid: int, discarded_tokens: int = 0) -> None:
         """``discarded_tokens``: generated output thrown away by the eviction
         (recompute-on-resume), so throughput can separate work from goodput."""
         self.requests[rid].n_preempt += 1
-        self.n_preemptions += 1
-        self.n_discarded_tokens += discarded_tokens
+        self._c_preempt.inc()
+        self._c_discard.inc(discarded_tokens)
 
     def on_finish(self, rid: int, step: int) -> None:
         self.requests[rid].finish_step = step
+        self._c_completed.inc()
 
     def on_step(self, concurrent: int, occupancy: float,
                 queue_depth: int) -> None:
-        self.n_steps += 1
-        self.max_concurrent = max(self.max_concurrent, concurrent)
+        self._c_steps.inc()
+        self._g_concurrent.set(concurrent)
+        self._g_concurrent_max.set_max(concurrent)
+        self._g_occupancy.set(occupancy)
+        self._h_queue.observe(queue_depth)
         self.occupancy_samples.append(occupancy)
         self.queue_depth_samples.append(queue_depth)
-        self._wall = time.perf_counter() - self._t0
+        self._wall = self._clock() - self._t0
 
     # -- reporting ---------------------------------------------------------------
     def summary(self, kv_stats: Optional[dict] = None) -> dict:

@@ -306,11 +306,13 @@ class PagedKVCache:
             self.arena.free(addr)
         self._tokens.pop(rid, None)
 
-    def request_replan(self) -> None:
-        """Flag observed pressure (e.g. a preemption): replan at the boundary."""
-        self.arena.request_replan()
+    def request_replan(self, cause: str = "decode-outrun") -> None:
+        """Flag observed pressure (e.g. a preemption): replan at the boundary.
+        ``cause`` tags the §4.3 counters the drift monitor reads — the
+        engine's page-pool-exhaustion path is "decode-outrun"."""
+        self.arena.request_replan(cause)
         if self.tenant is not None:
-            self.tenant.request_replan()
+            self.tenant.request_replan(cause=cause)
 
     def reset_epoch(self) -> None:
         """Boundary: §4.3 replan from the shadow-observed stream, then resize
@@ -356,6 +358,8 @@ class PagedKVCache:
             "planned_peak": a["peak"],
             "max_peak": a["max_peak"],
             "overflow_peak": a["overflow_peak"],
+            "n_replan_requests": a["n_replan_requests"],
+            "replan_causes": a["replan_causes"],
         }
         if self.tenant is not None:
             out["tenant"] = self.tenant.stats()

@@ -19,6 +19,7 @@ import enum
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
+from ..obs.trace import get_tracer
 from .pages import PagedKVCache
 
 POLICIES = ("fcfs", "priority")
@@ -119,6 +120,11 @@ class Scheduler:
         sr.out = []
         self.kv.admit(sr.rid, sr.prompt_len)
         self.active[sr.rid] = sr
+        t = get_tracer()
+        if t is not None:
+            t.instant("admit", "serving", track="scheduler", rid=sr.rid,
+                      slot=sr.slot, prompt_len=sr.prompt_len,
+                      n_active=self.n_active)
         return sr
 
     def admit(self, step: int) -> list[ScheduledRequest]:
@@ -145,12 +151,17 @@ class Scheduler:
         prefill *completed* this step (ready for their model prefill call)."""
         budget = self.prefill_chunk
         ready = []
+        t = get_tracer()
         for sr in sorted(self.active.values(), key=lambda s: s.admit_step):
             if sr.state is not RequestState.PREFILL or budget <= 0:
                 continue
             take = min(budget, sr.prompt_len - sr.prefill_done)
             sr.prefill_done += take
             budget -= take
+            if t is not None:
+                t.instant("prefill-chunk", "serving", track="scheduler",
+                          rid=sr.rid, take=take, done=sr.prefill_done,
+                          prompt_len=sr.prompt_len, budget_left=budget)
             if sr.prefill_done >= sr.prompt_len:
                 sr.state = RequestState.RUNNING
                 ready.append(sr)

@@ -1,0 +1,170 @@
+"""DriftMonitor: planned vs observed, and the replan-cause taxonomy.
+
+Each replan path carries its cause end to end — the arena counts it, the
+owning subsystem's ``stats()`` surfaces it, and the drift report aggregates
+it — so a drift report can say not just *that* reality outran the plan but
+*which* mechanism noticed (decode-outrun vs over-budget vs
+boundary-rebalance vs oversize/novel blocks).
+"""
+import pytest
+
+from repro.core import MemoryProfile, SharedArena, best_fit, make_profile
+from repro.core.arena import ArenaAllocator
+from repro.core.events import Block
+from repro.core.profiler import MemoryRecorder
+from repro.obs import DriftMonitor, live_curve
+
+
+def _profile(items):
+    return make_profile(items)
+
+
+# ---------------------------------------------------------------------------
+# live_curve
+# ---------------------------------------------------------------------------
+
+
+def test_live_curve_tracks_concurrent_demand():
+    # two co-live blocks then one alone (sizes are alignment-rounded)
+    prof = _profile([(100, 0, 8), (100, 0, 4)])
+    sz = prof.blocks[0].size
+    curve = live_curve(prof, bins=8)
+    assert max(curve) == prof.liveness_lower_bound() == 2 * sz
+    assert curve[0] == 2 * sz and curve[-1] == sz
+
+
+def test_live_curve_normalizes_clock_domains():
+    # same shape on a 10x longer clock -> same normalized curve
+    a = _profile([(64, 0, 4), (32, 2, 6)])
+    blocks = [Block(bid=b.bid, size=b.size, start=b.start * 10,
+                    end=b.end * 10) for b in a.blocks]
+    b = MemoryProfile(blocks=blocks, clock_end=a.clock_end * 10)
+    assert live_curve(a, bins=16) == live_curve(b, bins=16)
+
+
+# ---------------------------------------------------------------------------
+# DriftMonitor
+# ---------------------------------------------------------------------------
+
+
+def test_no_drift_when_observed_matches_plan():
+    prof = _profile([(128, 0, 4), (64, 1, 5), (256, 3, 7)])
+    mon = DriftMonitor(prof)
+    mon.observe(prof)
+    rep = mon.report()
+    assert rep["peak_ratio"] <= 1.0
+    assert rep["drift_ratio_mean"] == 0.0 and rep["drift_ratio_max"] == 0.0
+    assert rep["n_replans"] == 0 and rep["replan_causes"] == {}
+    assert rep["planned_peak"] == best_fit(prof).peak
+    # fragmentation: plan slack over the liveness lower bound
+    assert 0.0 <= rep["fragmentation"] < 1.0
+
+
+def test_observed_growth_shows_in_peak_and_shape():
+    planned = _profile([(512, 0, 4)])
+    observed = _profile([(512, 0, 4), (1536, 1, 3)])   # co-live newcomer
+    mon = DriftMonitor(planned, budget=10_000)
+    mon.observe(observed, causes={"novel-block": 1})
+    rep = mon.report()
+    assert rep["peak_ratio"] == pytest.approx(4.0)
+    assert rep["drift_ratio_max"] >= 3.0
+    assert rep["replan_causes"] == {"novel-block": 1}
+    assert rep["headroom_bytes"] == 10_000 - 2048
+
+
+def test_observe_arena_picks_up_overflow_and_causes():
+    arena = ArenaAllocator(_profile([(64, 1, 3)]))
+    arena.alloc(64)
+    arena.alloc(4096)            # novel block id -> overflow above the plan
+    mon = DriftMonitor(arena.profile, plan=arena.plan)
+    mon.observe_arena(arena)
+    rep = mon.report()
+    assert rep["peak_ratio"] > 1.0          # max_peak includes the overflow
+    assert rep["replan_causes"].get("novel-block") == 1
+    assert rep["n_replans"] == arena.n_replan_requests == 1
+
+
+# ---------------------------------------------------------------------------
+# cause taxonomy, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_arena_stats_surface_replan_causes():
+    arena = ArenaAllocator(_profile([(64, 1, 3)]))
+    arena.request_replan("decode-outrun")
+    arena.request_replan("decode-outrun")
+    arena.request_replan()                   # default tag
+    s = arena.stats()
+    assert s["n_replan_requests"] == 3
+    assert s["replan_causes"] == {"decode-outrun": 2, "requested": 1}
+
+
+def test_paged_kv_cache_tags_decode_outrun():
+    from repro.configs import get_config
+    from repro.runtime.serve_lib import Request
+    from repro.serving.pages import PagePoolExhausted, PagedKVCache
+
+    trace = [Request(rid=i + 1, prompt_len=16, gen_len=8, arrival=0)
+             for i in range(2)]
+    kv = PagedKVCache(get_config("qwen2-0.5b"), trace, page_tokens=8)
+    for r in trace:
+        kv.admit(r.rid, r.prompt_len)
+    # decode until the pool actually runs out of pages
+    with pytest.raises(PagePoolExhausted):
+        for _ in range(10_000):
+            for r in trace:
+                kv.append_token(r.rid)
+    kv.request_replan()                      # what the engine does on catch
+    s = kv.stats()
+    assert s["replan_causes"] == {"decode-outrun": 1}
+    assert s["n_replan_requests"] == 1
+
+
+def test_shared_arena_records_over_budget_shrink():
+    serving = _profile([(1 << 20, 0, 8)])
+    training = _profile([(1 << 20, 0, 2), (1 << 20, 1, 4)])
+
+    def shrink(target):
+        # drop the second activation block, as the remat search would
+        return _profile([(1 << 20, 0, 2)])
+
+    arena = SharedArena(hbm_budget=int(2.2 * (1 << 20)))
+    arena.register_serving(serving)
+    arena.register_training(training, shrink=shrink)
+    plan = arena.plan()
+    assert plan.feasible and plan.shrink_rounds >= 1
+    assert arena.replan_causes.get("over-budget", 0) >= 1
+    assert arena.stats()["replan_causes"] == arena.replan_causes
+
+
+def test_shared_arena_records_boundary_rebalance():
+    arena = SharedArena(hbm_budget=1 << 30)
+    sv = arena.register_serving(_profile([(512, 0, 6)]))
+    arena.register_training(_profile([(256, 0, 3)]))
+    arena.plan()
+    sv.request_replan(_profile([(512, 0, 6), (512, 2, 5)]))
+    assert arena.reset_round()
+    assert arena.replan_causes.get("boundary-rebalance", 0) >= 1
+    mon = DriftMonitor(arena.plan().profile, plan=arena.plan().plan)
+    mon.observe(arena.plan().profile, causes=arena.replan_causes)
+    assert mon.report()["replan_causes"]["boundary-rebalance"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# recorder counters (previously recorded but never surfaced)
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_stats_surface_skipped_events():
+    rec = MemoryRecorder()
+    a = rec.on_alloc(100)
+    with rec.non_hot():
+        assert rec.on_alloc(999) == -1       # ignored, counted
+        rec.on_free(-1)
+    rec.on_free(a)
+    s = rec.stats()
+    assert s["skipped"] == 2
+    assert s["n_closed"] == 1 and s["n_open"] == 0
+    assert s["interrupt_depth"] == 0
+    # finish() keeps exporting it through profile meta as before
+    assert rec.finish().meta["skipped"] == 2

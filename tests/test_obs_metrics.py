@@ -1,0 +1,172 @@
+"""Metrics registry + exporters, and ServeMetrics on top of them.
+
+The backward-compat contract: ``ServeMetrics.summary()`` keeps its exact key
+set (benchmarks and the perf trajectory parse it), while the counters now
+live in a registry and wall time comes from an injectable clock — so the
+whole summary is reproducible under ``ManualClock``.
+"""
+import json
+
+import pytest
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, ManualClock,
+                               MetricsRegistry)
+from repro.serving.metrics import ServeMetrics
+
+# the keys BENCH_serving.json and the perf trajectory rely on
+SUMMARY_KEYS = {
+    "n_requests", "n_completed", "n_steps", "wall_s", "tokens",
+    "tokens_per_s", "tokens_discarded", "goodput_tokens_per_s",
+    "prefill_tokens", "ttft_steps_mean", "ttft_steps_max", "max_concurrent",
+    "n_preemptions", "occupancy_peak", "occupancy_mean",
+}
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_only_goes_up():
+    c = Counter("x")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    c.set(2)                      # migration escape hatch
+    assert c.value == 2
+
+
+def test_gauge_set_max_tracks_high_water():
+    g = Gauge("x")
+    for v in (3, 7, 2):
+        g.set_max(v)
+    assert g.value == 7
+    g.dec(2)
+    assert g.value == 5
+
+
+def test_histogram_buckets_are_cumulative():
+    h = Histogram("lat", buckets=(1, 5, 10))
+    for v in (0.5, 3, 7, 100):
+        h.observe(v)
+    assert h.bucket_counts == [1, 2, 3]       # each le counts everything <= it
+    assert h.count == 4 and h.sum == 110.5
+    assert h.min == 0.5 and h.max == 100
+    assert h.mean == pytest.approx(110.5 / 4)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_get_or_create_and_kind_clash():
+    r = MetricsRegistry()
+    a = r.counter("hits", "help text")
+    assert r.counter("hits") is a
+    assert r.counter("hits", labels={"arch": "qwen"}) is not a
+    with pytest.raises(TypeError):
+        r.gauge("hits")
+
+
+def test_prometheus_text_format():
+    r = MetricsRegistry()
+    r.counter("reqs_total", "requests").inc(3)
+    r.gauge("depth", labels={"queue": "a"}).set(2)
+    h = r.histogram("lat_s", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(5.0)
+    text = r.to_prometheus_text()
+    lines = text.strip().splitlines()
+    assert "# HELP reqs_total requests" in lines
+    assert "# TYPE reqs_total counter" in lines
+    assert "reqs_total 3" in lines
+    assert 'depth{queue="a"} 2' in lines
+    assert 'lat_s_bucket{le="0.1"} 1' in lines
+    assert 'lat_s_bucket{le="1.0"} 1' in lines
+    assert 'lat_s_bucket{le="+Inf"} 2' in lines       # +Inf == count
+    assert "lat_s_sum 5.05" in lines
+    assert "lat_s_count 2" in lines
+    # TYPE/HELP emitted once per metric name even with labelled variants
+    r.gauge("depth", labels={"queue": "b"}).set(9)
+    text2 = r.to_prometheus_text()
+    assert text2.count("# TYPE depth gauge") == 1
+
+
+def test_json_export_parses_and_round_trips():
+    r = MetricsRegistry()
+    r.counter("c").inc(2)
+    r.histogram("h", buckets=(1,)).observe(0.5)
+    out = json.loads(r.to_json_text())
+    assert out["c"]["value"] == 2
+    assert out["h"]["count"] == 1 and out["h"]["buckets"]["1.0"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ServeMetrics on the registry, under a fake clock
+# ---------------------------------------------------------------------------
+
+
+def _drive(m: ServeMetrics, clk: ManualClock) -> dict:
+    m.on_enqueue(1, 16, 0)
+    m.on_enqueue(2, 8, 0)
+    m.on_admit(1, 1)
+    m.n_prefill_tokens += 16          # the engine's in-place mutation
+    m.on_first_token(1, 2)
+    for _ in range(6):
+        m.on_token(1)
+    clk.advance(1.5)
+    m.on_step(concurrent=2, occupancy=0.75, queue_depth=1)
+    m.on_preempt(2, discarded_tokens=3)
+    m.on_finish(1, 9)
+    clk.advance(0.5)
+    m.on_step(concurrent=1, occupancy=0.25, queue_depth=0)
+    return m.summary({"n_pages": 7})
+
+
+def test_summary_reproducible_under_manual_clock():
+    runs = []
+    for _ in range(2):
+        clk = ManualClock(start=123.0)
+        runs.append(_drive(ServeMetrics(clock=clk), clk))
+    assert runs[0] == runs[1]
+    s = runs[0]
+    assert s["wall_s"] == 2.0
+    assert s["tokens"] == 6 and s["tokens_per_s"] == 3.0
+    assert s["tokens_discarded"] == 3 and s["goodput_tokens_per_s"] == 1.5
+    assert s["prefill_tokens"] == 16
+    assert s["ttft_steps_mean"] == 2 and s["max_concurrent"] == 2
+    assert s["occupancy_peak"] == 0.75 and s["occupancy_mean"] == 0.5
+
+
+def test_summary_keys_backward_compatible():
+    clk = ManualClock()
+    s = _drive(ServeMetrics(clock=clk), clk)
+    assert SUMMARY_KEYS | {"kv_n_pages"} == set(s)
+    # kv_* passthrough prefixes pool stats
+    assert s["kv_n_pages"] == 7
+
+
+def test_counters_live_in_the_registry():
+    clk = ManualClock()
+    reg = MetricsRegistry()
+    m = ServeMetrics(registry=reg, clock=clk)
+    _drive(m, clk)
+    j = reg.to_json()
+    assert j["serve_decode_tokens_total"]["value"] == 6
+    assert j["serve_prefill_tokens_total"]["value"] == 16
+    assert j["serve_preemptions_total"]["value"] == 1
+    assert j["serve_steps_total"]["value"] == 2
+    assert j["serve_concurrent_max"]["value"] == 2
+    assert j["serve_ttft_steps"]["count"] == 1
+    text = reg.to_prometheus_text()
+    assert "serve_decode_tokens_total 6" in text
+    # a shared registry aggregates across engines
+    m2 = ServeMetrics(registry=reg, clock=clk)
+    m2.on_enqueue(9, 4, 0)
+    m2.on_token(9)
+    assert reg.to_json()["serve_decode_tokens_total"]["value"] == 7
+    # ...which is visible through both views (shared counters)
+    assert m.n_decode_tokens == m2.n_decode_tokens == 7

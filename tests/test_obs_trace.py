@@ -1,0 +1,253 @@
+"""Tracer ring buffer + Chrome-trace export schema and rectangle invariants.
+
+The export is the observability contract: traces must load in Perfetto
+(object format, required keys, sorted timestamps, pid/tid metadata per
+process and track) and the packed-plan rendering must inherit the planner's
+no-overlap invariant — re-checked here with the independent rectangle
+checker from ``test_packing_invariants``, reconstructed purely from the
+exported JSON.
+"""
+import json
+import types
+
+import pytest
+
+from repro.core import MemoryProfile, best_fit, make_profile
+from repro.core.arena import ArenaAllocator
+from repro.core.events import Block
+from repro.obs import (ChromeTraceBuilder, ManualClock, TraceEvent, Tracer,
+                       disable, enable, get_tracer, plan_rectangles,
+                       use_tracer, validate_chrome_trace)
+from repro.serving.pages import paged_request_blocks
+
+from test_packing_invariants import (assert_no_live_overlap, _serving_cfg,
+                                     random_profile, staircase_trace)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_ring_buffer_drops_oldest_and_accounts():
+    t = Tracer(capacity=4, clock=ManualClock(tick=1e-6))
+    for i in range(10):
+        t.instant(f"e{i}", "arena")
+    evs = t.events()
+    assert len(evs) == 4
+    assert t.n_dropped == 6
+    assert [e.name for e in evs] == ["e6", "e7", "e8", "e9"]
+    assert t.stats()["n_emitted"] == 10
+
+
+def test_manual_clock_makes_timestamps_deterministic():
+    def run():
+        clk = ManualClock(start=5.0)
+        t = Tracer(clock=clk)
+        t.instant("a", "arena")
+        clk.advance(0.001)
+        t.instant("b", "arena")
+        return [e.ts for e in t.events()]
+
+    assert run() == run() == [0.0, pytest.approx(1000.0)]
+
+
+def test_step_stamp_and_span():
+    clk = ManualClock()
+    t = Tracer(clock=clk)
+    t.set_step(7)
+    with t.span("work", "serving", track="engine", what="x"):
+        clk.advance(0.002)
+    (ev,) = t.events()
+    assert ev.ph == "X" and ev.step == 7 and ev.track == "engine"
+    assert ev.dur == pytest.approx(2000.0)
+    assert ev.args["what"] == "x"
+
+
+def test_global_tracer_install_and_restore():
+    assert get_tracer() is None
+    mine = Tracer()
+    with use_tracer(mine):
+        assert get_tracer() is mine
+        inner = Tracer()
+        with use_tracer(inner):
+            assert get_tracer() is inner
+        assert get_tracer() is mine
+    assert get_tracer() is None
+    # enable() accepts an existing tracer or builds one from a capacity
+    assert enable(mine) is mine
+    assert disable() is mine
+    fresh = enable(16)
+    assert fresh.capacity == 16
+    assert disable() is fresh
+    assert get_tracer() is None
+
+
+def test_instrumented_arena_emits_when_enabled_only():
+    prof = make_profile([(64, 1, 3), (128, 2, 5)])
+    arena = ArenaAllocator(prof)
+    a = arena.alloc(64)          # no tracer: must not fail, emits nothing
+    arena.free(a)
+    t = Tracer()
+    with use_tracer(t):
+        arena.reset_iteration()
+        addr = arena.alloc(64)
+        arena.free(addr)
+        arena.request_replan("decode-outrun")
+    names = [e.name for e in t.events()]
+    assert "alloc" in names and "free" in names
+    assert "replan-request" in names
+    assert all(e.cat == "arena" for e in t.events())
+
+
+# ---------------------------------------------------------------------------
+# export schema
+# ---------------------------------------------------------------------------
+
+
+def _sample_events():
+    clk = ManualClock(tick=1e-6)
+    t = Tracer(clock=clk)
+    t.set_step(0)
+    for step in range(3):
+        t.set_step(step)
+        t.instant("admit", "serving", track="tenant-a", rid=step)
+        t.instant("admit", "serving", track="tenant-b", rid=10 + step)
+        t.counter("queue_depth", "serving", value=step)
+    t.instant("replan", "arena", track="arena", cause="novel-block")
+    return t.events()
+
+
+def test_export_schema_required_keys_and_sorted_ts(tmp_path):
+    tb = ChromeTraceBuilder()
+    tb.add_events(_sample_events())
+    path = tmp_path / "t.json"
+    trace = tb.write(str(path))
+    validate_chrome_trace(trace)                 # builder output passes
+    loaded = json.loads(path.read_text())
+    validate_chrome_trace(loaded)                # survives the round trip
+    evs = [e for e in loaded["traceEvents"] if e["ph"] != "M"]
+    assert evs, "no runtime events exported"
+    for e in evs:
+        for key in ("name", "cat", "ph", "pid", "tid", "ts"):
+            assert key in e
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts)
+    # step stamp rides along in args (counters carry only their value)
+    assert all("step" in e["args"] for e in evs if e["ph"] != "C")
+
+
+def test_export_pid_per_category_tid_per_track(tmp_path):
+    tb = ChromeTraceBuilder()
+    tb.add_events(_sample_events())
+    trace = tb.build()
+    meta = [e for e in trace["traceEvents"] if e["ph"] == "M"]
+    procs = {e["args"]["name"]: e["pid"] for e in meta
+             if e["name"] == "process_name"}
+    threads = {(e["pid"], e["args"]["name"]): e["tid"] for e in meta
+               if e["name"] == "thread_name"}
+    # one process per category, named
+    assert set(procs) == {"serving", "arena"}
+    assert len(set(procs.values())) == 2
+    # each tenant track is its own thread within the serving process
+    spid = procs["serving"]
+    assert (spid, "tenant-a") in threads and (spid, "tenant-b") in threads
+    assert threads[(spid, "tenant-a")] != threads[(spid, "tenant-b")]
+    # events reference exactly the declared pid/tid pairs
+    declared = {(p, t) for (p, _n), t in threads.items()}
+    for e in trace["traceEvents"]:
+        if e["ph"] != "M":
+            assert (e["pid"], e["tid"]) in declared
+
+
+def test_validator_rejects_malformed_traces():
+    with pytest.raises(ValueError):
+        validate_chrome_trace([])                         # array format
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": []})        # empty
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [{"ph": "i"}]})   # missing keys
+    bad_order = {"traceEvents": [
+        {"name": "a", "ph": "i", "pid": 1, "tid": 1, "ts": 5},
+        {"name": "b", "ph": "i", "pid": 1, "tid": 1, "ts": 1},
+    ]}
+    with pytest.raises(ValueError):
+        validate_chrome_trace(bad_order)
+    no_dur = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0}]}
+    with pytest.raises(ValueError):
+        validate_chrome_trace(no_dur)
+
+
+# ---------------------------------------------------------------------------
+# packing rectangles: the export inherits the no-overlap invariant
+# ---------------------------------------------------------------------------
+
+
+def _check_plan_export(profile: MemoryProfile) -> None:
+    """Export a plan, reconstruct it from the JSON alone, and re-verify the
+    invariant with the independent checker; also check that no two slices
+    sharing a Perfetto track overlap in time (what a human would see)."""
+    plan = best_fit(profile)
+    tb = ChromeTraceBuilder()
+    tb.add_plan("p", profile, plan=plan)
+    trace = tb.build()
+    validate_chrome_trace(trace)
+    rects = plan_rectangles(trace, "p")
+    live = [b for b in profile.blocks if b.size > 0]
+    assert len(rects) == len(live)
+
+    # reconstruction: blocks + offsets straight from the exported args
+    blocks = [Block(bid=r["bid"], size=r["size"], start=r["start"],
+                    end=r["end"]) for r in rects]
+    offsets = {r["bid"]: r["offset"] for r in rects}
+    peak = rects[0]["peak"]
+    rec_profile = MemoryProfile(blocks=blocks,
+                                clock_end=max(b.end for b in blocks))
+    rec_plan = types.SimpleNamespace(offsets=offsets, peak=peak)
+    assert_no_live_overlap(rec_profile, rec_plan)
+
+    # per-track: same tid => same address => slices never overlap in time
+    by_tid: dict = {}
+    for r in rects:
+        by_tid.setdefault(r["tid"], []).append(r)
+    for tid, rs in by_tid.items():
+        assert len({r["offset"] for r in rs}) == 1
+        rs = sorted(rs, key=lambda r: r["start"])
+        for a, b in zip(rs, rs[1:]):
+            assert a["end"] <= b["start"], (
+                f"track {tid}: rectangles {a['bid']} and {b['bid']} overlap")
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_exported_rectangles_never_overlap_random(seed):
+    _check_plan_export(random_profile(seed, 6 + 4 * seed))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_exported_rectangles_never_overlap_staircase(seed):
+    prof = paged_request_blocks(staircase_trace(seed, 3 + seed),
+                                _serving_cfg(), 16)
+    _check_plan_export(prof)
+
+
+if HAVE_HYPOTHESIS:
+    block_strategy = st.tuples(
+        st.integers(min_value=0, max_value=1 << 14),
+        st.integers(min_value=0, max_value=30),
+        st.integers(min_value=1, max_value=15),
+    ).map(lambda t: (t[0], t[1], t[1] + t[2]))
+    profiles = st.lists(block_strategy, min_size=1,
+                        max_size=24).map(make_profile)
+
+    @given(profiles)
+    @settings(max_examples=50, deadline=None)
+    def test_prop_exported_rectangles_never_overlap(prof):
+        _check_plan_export(prof)
