@@ -45,80 +45,80 @@ def _training_profile(*, seq: int, batch: int):
 def main(quick: bool = False):
     from repro.configs import get_config
     from repro.core import MemoryPlanner
-    from repro.obs import ChromeTraceBuilder, DriftMonitor, Tracer
-    from repro.obs import disable as trace_disable
-    from repro.obs import enable as trace_enable
+    from repro.obs import ChromeTraceBuilder, DriftMonitor, Tracer, use_tracer
     from repro.runtime.serve_lib import synth_trace
     from repro.serving.pages import plan_pool
 
     print("# Unified: name,us_per_call,derived")
-    tracer = trace_enable(Tracer())
-    n_req, train_steps = (12, 4) if quick else (24, 6)
-    seq, batch = (64, 4) if quick else (128, 4)
+    # scoped install (not enable/disable) so a driver-installed global
+    # tracer (benchmarks/run.py --trace) is restored afterwards
+    tracer = Tracer()
+    with use_tracer(tracer):
+        n_req, train_steps = (12, 4) if quick else (24, 6)
+        seq, batch = (64, 4) if quick else (128, 4)
 
-    cfg = get_config("qwen2-0.5b")
-    trace = synth_trace(n_req, prompt_len=64, gen_len=96, seed=0, jitter=False)
-    pool_plan = plan_pool(cfg, trace, page_tokens=32)
-    tprof = _training_profile(seq=seq, batch=batch)
-    planner = MemoryPlanner()
+        cfg = get_config("qwen2-0.5b")
+        trace = synth_trace(n_req, prompt_len=64, gen_len=96, seed=0, jitter=False)
+        pool_plan = plan_pool(cfg, trace, page_tokens=32)
+        tprof = _training_profile(seq=seq, batch=batch)
+        planner = MemoryPlanner()
 
-    # -- scenario 1: generous budget — measure the pure sharing win ----------
-    serve_peak = planner.plan(pool_plan.profile).peak
-    train_peak = planner.plan(tprof).peak
-    arena = planner.plan_shared(
-        hbm_budget=2 * (serve_peak + train_peak) + tprof.retained_bytes,
-        serving_profile=pool_plan.profile, training_profile=tprof,
-        train_steps=train_steps, shrink=None)
-    plan = arena.plan()
-    s = plan.summary()
-    ratio = s["joint_vs_sum"]
-    served_tokens = sum(r.prompt_len + r.gen_len for r in trace)
-    derived = (f"serve_MB={serve_peak / 1e6:.2f};train_MB={train_peak / 1e6:.2f};"
-               f"joint_MB={plan.joint_peak / 1e6:.2f};ratio={ratio:.3f};"
-               f"win_MB={plan.sharing_win / 1e6:.2f};"
-               f"train_steps={train_steps};gate={'PASS' if ratio <= RATIO_GATE else 'FAIL'}")
-    print(f"unified/concurrent/qwen2-0.5b,0.0,{derived}")
+        # -- scenario 1: generous budget — measure the pure sharing win ----------
+        serve_peak = planner.plan(pool_plan.profile).peak
+        train_peak = planner.plan(tprof).peak
+        arena = planner.plan_shared(
+            hbm_budget=2 * (serve_peak + train_peak) + tprof.retained_bytes,
+            serving_profile=pool_plan.profile, training_profile=tprof,
+            train_steps=train_steps, shrink=None)
+        plan = arena.plan()
+        s = plan.summary()
+        ratio = s["joint_vs_sum"]
+        served_tokens = sum(r.prompt_len + r.gen_len for r in trace)
+        derived = (f"serve_MB={serve_peak / 1e6:.2f};train_MB={train_peak / 1e6:.2f};"
+                   f"joint_MB={plan.joint_peak / 1e6:.2f};ratio={ratio:.3f};"
+                   f"win_MB={plan.sharing_win / 1e6:.2f};"
+                   f"train_steps={train_steps};gate={'PASS' if ratio <= RATIO_GATE else 'FAIL'}")
+        print(f"unified/concurrent/qwen2-0.5b,0.0,{derived}")
 
-    # -- scenario 2: tight budget, dense traffic — evict-vs-share as one
-    # trade.  All requests arrive at once, so the serving load curve has no
-    # deep valleys for training to hide in; the budget sits below the joint
-    # demand and the arena must ask the remat search to shrink the step.
-    from repro.runtime.serve_lib import Request
-    dense = [Request(rid=r.rid, prompt_len=r.prompt_len, gen_len=r.gen_len,
-                     arrival=min(r.arrival, 2)) for r in trace]
-    dense_plan = plan_pool(cfg, dense, page_tokens=32)
-    dense_peak = planner.plan(dense_plan.profile).peak
-    tight_budget = tprof.retained_bytes + dense_peak + int(0.35 * train_peak)
-    tight = planner.plan_shared(
-        hbm_budget=tight_budget, serving_profile=dense_plan.profile,
-        training_profile=tprof, train_steps=train_steps, shrink="remat")
-    tplan = tight.plan()
-    tderived = (f"budget_MB={tight_budget / 1e6:.2f};"
-                f"serve_MB={dense_peak / 1e6:.2f};"
-                f"joint_MB={tplan.joint_peak / 1e6:.2f};"
-                f"feasible={tplan.feasible};shrink_rounds={tplan.shrink_rounds}")
-    print(f"unified/tight/qwen2-0.5b,0.0,{tderived}")
+        # -- scenario 2: tight budget, dense traffic — evict-vs-share as one
+        # trade.  All requests arrive at once, so the serving load curve has no
+        # deep valleys for training to hide in; the budget sits below the joint
+        # demand and the arena must ask the remat search to shrink the step.
+        from repro.runtime.serve_lib import Request
+        dense = [Request(rid=r.rid, prompt_len=r.prompt_len, gen_len=r.gen_len,
+                         arrival=min(r.arrival, 2)) for r in trace]
+        dense_plan = plan_pool(cfg, dense, page_tokens=32)
+        dense_peak = planner.plan(dense_plan.profile).peak
+        tight_budget = tprof.retained_bytes + dense_peak + int(0.35 * train_peak)
+        tight = planner.plan_shared(
+            hbm_budget=tight_budget, serving_profile=dense_plan.profile,
+            training_profile=tprof, train_steps=train_steps, shrink="remat")
+        tplan = tight.plan()
+        tderived = (f"budget_MB={tight_budget / 1e6:.2f};"
+                    f"serve_MB={dense_peak / 1e6:.2f};"
+                    f"joint_MB={tplan.joint_peak / 1e6:.2f};"
+                    f"feasible={tplan.feasible};shrink_rounds={tplan.shrink_rounds}")
+        print(f"unified/tight/qwen2-0.5b,0.0,{tderived}")
 
-    # boundary rebalance: the tight arena sees the paced (observed) serving
-    # profile replace the dense one it planned for, and replans the split
-    tight.request_replan("serving", pool_plan.profile,
-                         cause="boundary-rebalance")
-    tight.reset_round()
+        # boundary rebalance: the tight arena sees the paced (observed) serving
+        # profile replace the dense one it planned for, and replans the split
+        tight.request_replan("serving", pool_plan.profile,
+                             cause="boundary-rebalance")
+        tight.reset_round()
 
-    # drift: the plan was sized from the paced sample trace; dense all-at-
-    # once traffic is what actually arrived.  Same rectangles, worse valleys.
-    drift = DriftMonitor(pool_plan.profile)
-    drift.observe(dense_plan.profile, label="dense-traffic")
-    drift_rep = drift.report()
-    replan_causes = dict(arena.replan_causes)
-    for k, v in tight.replan_causes.items():
-        replan_causes[k] = replan_causes.get(k, 0) + v
-    print(f"unified/drift/qwen2-0.5b,0.0,"
-          f"peak_ratio={drift_rep['peak_ratio']:.3f};"
-          f"replans={sum(replan_causes.values())};"
-          f"causes={replan_causes}")
+        # drift: the plan was sized from the paced sample trace; dense all-at-
+        # once traffic is what actually arrived.  Same rectangles, worse valleys.
+        drift = DriftMonitor(pool_plan.profile)
+        drift.observe(dense_plan.profile, label="dense-traffic")
+        drift_rep = drift.report()
+        replan_causes = dict(arena.replan_causes)
+        for k, v in tight.replan_causes.items():
+            replan_causes[k] = replan_causes.get(k, 0) + v
+        print(f"unified/drift/qwen2-0.5b,0.0,"
+              f"peak_ratio={drift_rep['peak_ratio']:.3f};"
+              f"replans={sum(replan_causes.values())};"
+              f"causes={replan_causes}")
 
-    trace_disable()
     tb = ChromeTraceBuilder()
     tb.add_events(tracer.events())
     tb.add_plan("joint", plan.profile, plan=plan.plan)

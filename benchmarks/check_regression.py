@@ -1,22 +1,27 @@
-"""Warn-only bench-regression gate.
+"""Bench-regression gate: warn-only by default, ``--strict`` exits non-zero.
 
-Diffs the key memory/packing metrics of a fresh quick bench run against the
-committed baselines in ``benchmarks/baselines/`` and prints GitHub-Actions
-``::warning::`` annotations for anything that moved the wrong way beyond
-tolerance.  Always exits 0 — the trajectory is surfaced, not enforced; a
-deliberate trade-off lands by refreshing the baseline in the same PR:
+Diffs the key memory/packing/SLO metrics of a fresh quick bench run against
+the committed baselines in ``benchmarks/baselines/`` and prints
+GitHub-Actions ``::warning::`` annotations for anything that moved the wrong
+way beyond tolerance.  The default mode always exits 0 — the trajectory is
+surfaced, not enforced; ``--strict`` exits 1 on any regression so a separate
+(non-required) CI job can go red without blocking merges.  A deliberate
+trade-off lands by refreshing the baseline in the same PR:
 
   BENCH_QUICK=1 python benchmarks/run.py --quick
-  cp BENCH_serving.json BENCH_remat.json BENCH_unified.json benchmarks/baselines/
+  cp BENCH_serving.json BENCH_remat.json BENCH_unified.json \
+     BENCH_scenarios.json benchmarks/baselines/
 
-Only deterministic metrics are compared (packed peaks, ratios, counts) —
-wall-clock throughput numbers are machine-dependent and excluded.
+Only deterministic metrics are compared (packed peaks, ratios, counts, and
+the scenario matrix's step-clock SLO numbers) — wall-clock throughput
+numbers are machine-dependent and excluded.  Baselines are quick-mode runs,
+matching what CI executes.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
-import sys
 
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
@@ -38,6 +43,23 @@ KEY_METRICS = [
     ("BENCH_unified.json", "ratio_joint_vs_sum", "higher_is_worse", 0.05),
     ("BENCH_unified.json", "sharing_win_bytes", "lower_is_worse", 0.05),
     ("BENCH_unified.json", "tight_budget.shrink_rounds", "higher_is_worse", 0.5),
+    # scenario matrix — step-clock SLO/goodput numbers (seeded, deterministic)
+    ("BENCH_scenarios.json", "cells.qwen2-poisson.slo.attainment",
+     "lower_is_worse", 0.0),
+    ("BENCH_scenarios.json", "cells.qwen2-poisson.slo.goodput_tokens_per_step",
+     "lower_is_worse", 0.05),
+    ("BENCH_scenarios.json", "cells.qwen2-diurnal.slo.goodput_tokens_per_step",
+     "lower_is_worse", 0.05),
+    ("BENCH_scenarios.json", "cells.mamba2-poisson.slo.attainment",
+     "lower_is_worse", 0.0),
+    ("BENCH_scenarios.json", "cells.qwen2-poisson-shared.slo.attainment",
+     "lower_is_worse", 0.0),
+    ("BENCH_scenarios.json", "cells.qwen2-burst-tight.slo.attainment",
+     "lower_is_worse", 0.0),
+    ("BENCH_scenarios.json", "cells.qwen2-burst-tight.n_preemptions",
+     "higher_is_worse", 0.5),
+    ("BENCH_scenarios.json", "cells.qwen2-burst-tight.n_completed",
+     "lower_is_worse", 0.0),
 ]
 
 
@@ -55,11 +77,17 @@ def lookup(obj, dotted: str):
 
 
 def main() -> int:
-    cur_dir = sys.argv[1] if len(sys.argv) > 1 else "."
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cur_dir", nargs="?", default=".",
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any regression (for a non-required CI "
+                         "job); default is warn-only exit 0")
+    args = ap.parse_args()
     n_checked = n_warn = 0
     for fname, path, direction, tol in KEY_METRICS:
         base_path = os.path.join(BASELINE_DIR, fname)
-        cur_path = os.path.join(cur_dir, fname)
+        cur_path = os.path.join(args.cur_dir, fname)
         try:
             with open(base_path) as f:
                 base = lookup(json.load(f), path)
@@ -68,6 +96,8 @@ def main() -> int:
         except (OSError, KeyError, ValueError, IndexError) as e:
             print(f"::warning::bench-regression: cannot compare "
                   f"{fname}:{path} ({e})")
+            if args.strict:
+                n_warn += 1
             continue
         n_checked += 1
         if direction == "higher_is_worse":
@@ -82,9 +112,10 @@ def main() -> int:
                   f"refresh benchmarks/baselines/ if intended")
         else:
             print(f"ok {fname}:{path} {base:g} -> {cur:g}")
+    mode = "strict" if args.strict else "warn-only"
     print(f"# checked {n_checked}/{len(KEY_METRICS)} metrics, "
-          f"{n_warn} regressions (warn-only)")
-    return 0
+          f"{n_warn} regressions ({mode})")
+    return 1 if (args.strict and n_warn) else 0
 
 
 if __name__ == "__main__":

@@ -7,10 +7,14 @@
   serve   beyond-paper: DSA on LLM serving KV traces
   remat   beyond-paper: profile-guided rematerialization for training
   unified beyond-paper: one HBM arena for concurrent serve + fine-tune
+  scenarios beyond-paper: SLO/goodput matrix on trace-replay traffic
   roofline (optional, needs results/dryrun)                (EXPERIMENTS §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV per line.
 Env: BENCH_QUICK=1 (or --quick) for the fast variant (used by CI/tests).
+``--trace PATH`` installs one global tracer across every section and writes
+the merged Perfetto timeline to PATH; ``--metrics`` installs one global
+MetricsRegistry and dumps the Prometheus scrape to ``BENCH_metrics.prom``.
 """
 from __future__ import annotations
 
@@ -53,7 +57,8 @@ def write_summary(quick: bool, failures: int) -> None:
 def _import_benches():
     try:
         from . import (bench_alloc_time, bench_heuristic, bench_memory,
-                       bench_remat, bench_reopt, bench_serving, bench_unified)
+                       bench_remat, bench_reopt, bench_serving, bench_unified,
+                       scenarios)
     except ImportError:
         # script mode (`python benchmarks/run.py`): repo root + src on path,
         # then import the benchmarks namespace package absolutely
@@ -63,19 +68,25 @@ def _import_benches():
                 sys.path.insert(0, p)
         from benchmarks import (bench_alloc_time, bench_heuristic,
                                 bench_memory, bench_remat, bench_reopt,
-                                bench_serving, bench_unified)
+                                bench_serving, bench_unified, scenarios)
     return (bench_alloc_time, bench_heuristic, bench_memory, bench_remat,
-            bench_reopt, bench_serving, bench_unified)
+            bench_reopt, bench_serving, bench_unified, scenarios)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast variant (same as BENCH_QUICK=1)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="install one global tracer across all sections and "
+                         "write the merged Perfetto timeline to PATH")
+    ap.add_argument("--metrics", action="store_true",
+                    help="install one global MetricsRegistry and dump the "
+                         "Prometheus scrape to BENCH_metrics.prom")
     args, _ = ap.parse_known_args()
     quick = args.quick or bool(int(os.environ.get("BENCH_QUICK", "0")))
-    (bench_alloc_time, bench_heuristic, bench_memory,
-     bench_remat, bench_reopt, bench_serving, bench_unified) = _import_benches()
+    (bench_alloc_time, bench_heuristic, bench_memory, bench_remat,
+     bench_reopt, bench_serving, bench_unified, scenarios) = _import_benches()
     sections = [
         ("fig2", bench_memory.main),
         ("fig3", bench_alloc_time.main),
@@ -84,17 +95,42 @@ def main() -> None:
         ("serve", bench_serving.main),
         ("remat", bench_remat.main),
         ("unified", bench_unified.main),
+        ("scenarios", scenarios.main),
     ]
+
+    from contextlib import ExitStack
+
+    from repro.obs import (ChromeTraceBuilder, MetricsRegistry, Tracer,
+                           use_registry, use_tracer)
+    stack = ExitStack()
+    tracer = registry = None
+    if args.trace:
+        tracer = stack.enter_context(use_tracer(Tracer(capacity=1 << 20)))
+    if args.metrics:
+        registry = stack.enter_context(use_registry(MetricsRegistry()))
+
     failures = 0
-    for name, fn in sections:
-        t0 = time.time()
-        try:
-            fn(quick=quick)
-            print(f"# section {name} done in {time.time() - t0:.1f}s")
-        except Exception:
-            failures += 1
-            print(f"# section {name} FAILED:", file=sys.stderr)
-            traceback.print_exc()
+    with stack:
+        for name, fn in sections:
+            t0 = time.time()
+            try:
+                fn(quick=quick)
+                print(f"# section {name} done in {time.time() - t0:.1f}s")
+            except Exception:
+                failures += 1
+                print(f"# section {name} FAILED:", file=sys.stderr)
+                traceback.print_exc()
+
+    if tracer is not None:
+        tb = ChromeTraceBuilder()
+        tb.add_events(tracer.events())
+        tb.write(args.trace)
+        print(f"# wrote {args.trace} ({len(tracer.events())} events, "
+              f"{tracer.n_dropped} dropped)")
+    if registry is not None:
+        with open("BENCH_metrics.prom", "w") as f:
+            f.write(registry.to_prometheus_text())
+        print(f"# wrote BENCH_metrics.prom ({len(registry.metrics())} metrics)")
 
     # roofline section (only if dry-run artifacts exist)
     dr = os.environ.get("DRYRUN_DIR", "results/dryrun")

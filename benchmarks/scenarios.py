@@ -1,0 +1,282 @@
+"""Declarative scenario matrix: config zoo × arrival pattern × memory budget.
+
+Every remaining ROADMAP item (decode runner, paged kernel, sharded planning)
+needs the same acceptance harness: *SLO curves under realistic churn*, not
+planned-bytes peaks.  This runner provides it.  Each cell drives a real
+(reduced) model through ``ServeEngine`` on seeded trace-replay traffic
+(``serving.loadgen``: Poisson / diurnal / burst arrivals, lognormal
+long-tail lengths, optional priority classes), folds the traced event
+stream into per-request spans, and reports:
+
+  * TTFT / TPOT / E2E percentiles (streaming histograms, step clock —
+    deterministic across machines);
+  * per-class SLO attainment and goodput (tokens from requests that met
+    their SLO);
+  * plan-vs-actual drift and the replan-cause table — which §4.3 replan
+    cause stalled which requests, and for how many steps;
+  * a span-conservation audit (queue+prefill+decode+preempted == E2E for
+    every finished request).
+
+Cells: ≥2 model configs × ≥2 arrival patterns, one ``--share-hbm``
+co-located serve+train cell, and one tight-budget burst cell whose pool is
+deliberately planned from an underestimating profile.
+
+Emits ``BENCH_scenarios.json`` plus one Perfetto-validated
+``TRACE_scenario_<cell>.json`` per cell (runtime events + request span
+tracks + the packed pool plan).
+
+  PYTHONPATH=src:. python benchmarks/scenarios.py --quick --only qwen2-poisson
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+
+OUT_JSON = os.environ.get("BENCH_SCENARIOS_JSON", "BENCH_scenarios.json")
+TRACE_PREFIX = os.environ.get("TRACE_SCENARIO_PREFIX", "TRACE_scenario_")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One cell of the matrix — everything needed to replay it."""
+
+    name: str
+    arch: str = "qwen2-0.5b"
+    arrival: str = "poisson"            # poisson | diurnal | burst
+    n_requests: int = 24                # full-mode size (quick uses n_quick)
+    n_quick: int = 8
+    mean_interarrival: float = 2.0
+    share_hbm: bool = False             # co-located serve + fine-tune tenant
+    tight_budget: bool = False          # pool planned from an underestimate
+    policy: str = "fcfs"
+    use_classes: bool = False           # interactive/batch priority mix
+    page_tokens: int = 8
+    max_batch: int = 8
+    prefill_chunk: int = 16
+    gen_jitter: int = 4
+    seed: int = 0
+    # SLO ceilings on the step clock (per class when use_classes); chosen
+    # to sit mid-range against the quick-mode distributions so attainment
+    # is informative (a regression moves it, a win moves it the other way)
+    slo: dict = field(default_factory=lambda: {
+        "default": {"ttft_steps": 4, "tpot_steps": 1.5, "e2e_steps": 12}})
+
+
+def default_matrix() -> list[Scenario]:
+    interactive_mix = {
+        "interactive": {"ttft_steps": 2, "tpot_steps": 1.0},
+        "batch": {"ttft_steps": 8, "tpot_steps": 2.0, "e2e_steps": 16},
+    }
+    return [
+        Scenario(name="qwen2-poisson"),
+        Scenario(name="qwen2-diurnal", arrival="diurnal",
+                 mean_interarrival=1.5),
+        Scenario(name="mamba2-poisson", arch="mamba2-130m"),
+        Scenario(name="mamba2-diurnal", arch="mamba2-130m",
+                 arrival="diurnal", mean_interarrival=1.5),
+        Scenario(name="qwen2-poisson-shared", share_hbm=True,
+                 n_requests=16, n_quick=6),
+        Scenario(name="qwen2-burst-tight", arrival="burst",
+                 tight_budget=True, policy="priority", use_classes=True,
+                 n_requests=20, n_quick=8,
+                 slo=interactive_mix),
+    ]
+
+
+def _slo_specs(sc: Scenario):
+    from repro.obs import SLOSpec
+    return [SLOSpec(name=name, **ceilings)
+            for name, ceilings in sc.slo.items()]
+
+
+def _traffic_classes(sc: Scenario):
+    from repro.serving import TrafficClass
+    if not sc.use_classes:
+        return ()
+    return (TrafficClass("interactive", priority=1, weight=0.4),
+            TrafficClass("batch", priority=0, weight=0.6))
+
+
+def run_cell(sc: Scenario, quick: bool, trace_dir: str = ".") -> dict:
+    import jax
+
+    from repro.core import MemoryPlanner, SharedArena, profile_fn
+    from repro.launch.train import reduced_config
+    from repro.models import Transformer
+    from repro.obs import (ChromeTraceBuilder, DriftMonitor, SLOEngine,
+                           SpanTracker, Tracer, summarize_spans, use_tracer,
+                           validate_chrome_trace)
+    from repro.runtime.serve_lib import Request
+    from repro.serving import LoadGen, LoadSpec, ServeEngine
+
+    n = sc.n_quick if quick else sc.n_requests
+    spec = LoadSpec(n_requests=n, arrival=sc.arrival,
+                    mean_interarrival=sc.mean_interarrival,
+                    prompt_mean=10, prompt_sigma=0.5, prompt_max=24,
+                    gen_mean=8, gen_sigma=0.6, gen_max=16,
+                    classes=_traffic_classes(sc), seed=sc.seed)
+    lg = LoadGen(spec)
+    lt = lg.trace()
+
+    cfg, seq, batch = reduced_config(sc.arch, "tiny")
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(sc.seed))
+    live = lg.gen_requests(cfg.vocab_size, gen_jitter=sc.gen_jitter, trace=lt)
+
+    # the pool is planned from the *profile* trace; live traffic (jittered
+    # generations) outgrows it — the §4.3 regime.  Tight-budget cells plan
+    # from a deliberate underestimate (half the profiled generation length),
+    # so the pool starts undersized and the cell churns through preemptions.
+    sample = lt.requests
+    if sc.tight_budget:
+        sample = [Request(rid=r.rid, prompt_len=r.prompt_len,
+                          gen_len=max(2, r.gen_len // 2), arrival=r.arrival)
+                  for r in lt.requests]
+
+    shared = None
+    train_steps = 2
+    if sc.share_hbm:
+        # co-located serve + fine-tune: the training tenant registers first
+        # so the engine's first joint plan sees both workloads
+        planner = MemoryPlanner()
+        import jax.numpy as jnp
+        bsds = {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
+        tprof = profile_fn(
+            jax.grad(lambda p, b: model.loss_fn(p, b, remat=False)[0]),
+            model.abstract(), bsds)
+        from repro.serving.pages import plan_pool
+        serve_peak = plan_pool(cfg, sample, page_tokens=sc.page_tokens
+                               ).planned_peak
+        train_peak = planner.plan(tprof).peak
+        budget = int(1.5 * (serve_peak + train_peak)) + tprof.retained_bytes
+        shared = SharedArena(budget)
+        shared.register_training(
+            tprof, steps_per_round=train_steps,
+            shrink=lambda target: planner.plan_with_remat(
+                tprof, target_peak=target).profile)
+
+    tracer = Tracer(capacity=262_144)
+    t0 = time.perf_counter()
+    with use_tracer(tracer):
+        eng = ServeEngine(model, params, sample_trace=sample, max_len=64,
+                          max_batch=sc.max_batch, page_tokens=sc.page_tokens,
+                          policy=sc.policy, prefill_chunk=sc.prefill_chunk,
+                          shared=shared)
+        summary = eng.run(live, max_steps=20_000)
+    wall_s = time.perf_counter() - t0
+
+    # fold events into request spans; audit conservation and attribution
+    tracker = SpanTracker().feed(tracer.events())
+    spans = tracker.finished()
+    violations = tracker.conservation_violations()
+    slo = SLOEngine(_slo_specs(sc))
+    slo.observe_spans(spans, classes=lt.class_of)
+    slo_report = slo.report(n_steps=eng.step_count, wall_s=wall_s)
+
+    drift = DriftMonitor(eng.kv.plan.profile)
+    drift.observe_arena(eng.kv.arena)
+
+    replan_causes = dict(eng.kv.arena.replan_causes)
+    if shared is not None:
+        for k, v in shared.replan_causes.items():
+            replan_causes[k] = replan_causes.get(k, 0) + v
+
+    # Perfetto export: runtime timeline + request span tracks + pool plan
+    trace_path = os.path.join(trace_dir, f"{TRACE_PREFIX}{sc.name}.json")
+    tb = ChromeTraceBuilder()
+    tb.add_events(tracer.events())
+    tb.add_events(tracker.to_events())
+    tb.add_plan("kv-pool", eng.kv.plan.profile)
+    if shared is not None:
+        jp = shared.plan()
+        tb.add_plan("joint", jp.profile, plan=jp.plan)
+    exported = tb.write(trace_path)
+    validate_chrome_trace(exported)
+
+    rec = {
+        "arch": sc.arch,
+        "arrival": sc.arrival,
+        "share_hbm": sc.share_hbm,
+        "tight_budget": sc.tight_budget,
+        "policy": sc.policy,
+        "seed": sc.seed,
+        "n_requests": n,
+        "n_completed": summary["n_completed"],
+        "n_steps": eng.step_count,
+        "slo": slo_report,
+        "spans": summarize_spans(spans),
+        "replan_attribution": tracker.attribution(),
+        "replan_causes": replan_causes,
+        "conservation_violations": violations,
+        "drift": drift.report(),
+        "n_preemptions": summary["n_preemptions"],
+        "kv_n_reopt": summary["kv_n_reopt"],
+        "trace_file": os.path.basename(trace_path),
+        "trace_events": len(tracer.events()),
+        "trace_dropped": tracer.n_dropped,
+        "wall_s": wall_s,
+    }
+    if shared is not None:
+        sp = shared.plan()
+        rec["shared"] = {"budget": shared.hbm_budget,
+                         "joint_peak": sp.joint_peak,
+                         "feasible": sp.feasible,
+                         "train_steps_per_round": train_steps,
+                         "boundary_reopts": shared.n_reopt}
+    if violations:
+        raise AssertionError(
+            f"{sc.name}: span conservation violated for rids {violations}")
+    return rec
+
+
+def main(quick: bool = False, only: str = "", trace_dir: str = ".") -> dict:
+    print("# Scenarios: name,us_per_call,derived")
+    cells: dict[str, dict] = {}
+    matrix = default_matrix()
+    if only:
+        matrix = [sc for sc in matrix if sc.name == only]
+        if not matrix:
+            raise SystemExit(f"no scenario named {only!r}; have "
+                             f"{[s.name for s in default_matrix()]}")
+    for sc in matrix:
+        rec = run_cell(sc, quick, trace_dir)
+        cells[sc.name] = rec
+        s = rec["slo"]
+        att = s["attainment"]
+        ttft = s.get("ttft_steps", {})
+        derived = (f"attainment={att if att is None else round(att, 3)};"
+                   f"goodput_tok_per_step={s.get('goodput_tokens_per_step', 0):.2f};"
+                   f"ttft_p50={ttft.get('p50')};ttft_p99={ttft.get('p99')};"
+                   f"preempt={rec['n_preemptions']};"
+                   f"replans={sum(rec['replan_causes'].values())};"
+                   f"conserved={not rec['conservation_violations']}")
+        print(f"scenario/{sc.name},{rec['wall_s'] * 1e6:.0f},{derived}")
+    out = {
+        "quick": quick,
+        "n_cells": len(cells),
+        "matrix": [sc.name for sc in matrix],
+        "cells": cells,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {OUT_JSON} ({len(cells)} cells) and "
+          f"{TRACE_PREFIX}*.json")
+    return out
+
+
+if __name__ == "__main__":
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (root, os.path.join(root, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="", help="run a single named cell")
+    ap.add_argument("--trace-dir", default=".",
+                    help="directory for TRACE_scenario_*.json")
+    args = ap.parse_args()
+    main(quick=args.quick, only=args.only, trace_dir=args.trace_dir)

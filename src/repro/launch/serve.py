@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..core import MemoryPlanner, SharedArena, profile_fn
 from ..models import Transformer
-from ..obs import ChromeTraceBuilder, DriftMonitor, Tracer, use_tracer
+from ..obs import (ChromeTraceBuilder, DriftMonitor, SLOEngine, SLOSpec,
+                   SpanTracker, Tracer, use_tracer)
 from ..runtime.serve_lib import ServingArena, synth_trace
 from ..serving import GenRequest, ServeEngine
 from .train import reduced_config
@@ -52,9 +53,16 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default="", metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run "
-                         "(runtime events + packed-plan rectangles)")
+                         "(runtime events + per-request span tracks + "
+                         "packed-plan rectangles)")
     ap.add_argument("--metrics", action="store_true",
                     help="print the metrics registry as Prometheus text")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="STEPS",
+                    help="TTFT ceiling (engine steps); enables the SLO report")
+    ap.add_argument("--slo-tpot", type=float, default=None, metavar="STEPS",
+                    help="per-token decode-cadence ceiling (engine steps)")
+    ap.add_argument("--slo-e2e", type=float, default=None, metavar="STEPS",
+                    help="enqueue->finish ceiling (engine steps)")
     args = ap.parse_args()
 
     cfg, seq, batch = reduced_config(args.arch, args.preset)
@@ -118,19 +126,41 @@ def main() -> None:
                        gen_len=max(2, r.gen_len + rng.randint(-2, 6)),
                        arrival=r.arrival)
             for r in trace]
-    tracer = Tracer() if args.trace else None
+    want_slo = any(v is not None
+                   for v in (args.slo_ttft, args.slo_tpot, args.slo_e2e))
+    tracer = Tracer() if (args.trace or want_slo) else None
     with use_tracer(tracer):
         summary = eng.run(live)
+    tracker = None
     if tracer is not None:
+        # fold the event stream into per-request spans (queue/prefill/
+        # decode/preempted) — the trace export and SLO report read these
+        tracker = SpanTracker().feed(tracer.events())
+    if args.trace:
         tb = ChromeTraceBuilder()
         tb.add_events(tracer.events())
+        tb.add_events(tracker.to_events())
         tb.add_plan("kv-pool", eng.kv.plan.profile)
         if shared is not None:
             jp = shared.plan()
             tb.add_plan("joint", jp.profile, plan=jp.plan)
         tb.write(args.trace)
         print(f"[trace] {len(tracer.events())} events "
-              f"(dropped {tracer.n_dropped}) -> {args.trace}")
+              f"(dropped {tracer.n_dropped}), "
+              f"{len(tracker.finished())} request spans -> {args.trace}")
+    if want_slo:
+        slo = SLOEngine(SLOSpec(ttft_steps=args.slo_ttft,
+                                tpot_steps=args.slo_tpot,
+                                e2e_steps=args.slo_e2e))
+        slo.observe_spans(tracker.finished())
+        rep = slo.report(n_steps=eng.step_count, wall_s=summary["wall_s"])
+        att = rep["attainment"]
+        print(f"[slo] attainment={'n/a' if att is None else f'{att:.3f}'} "
+              f"({rep['n_met']}/{rep['n_requests']}) "
+              f"goodput={rep['goodput_tokens_per_step']:.2f} tok/step "
+              f"({rep['goodput_tokens_per_s']:.1f} tok/s) "
+              f"ttft_p99={rep['ttft_steps']['p99']} "
+              f"e2e_p99={rep['e2e_steps']['p99']}")
     drift = DriftMonitor(eng.kv.plan.profile)
     drift.observe_arena(eng.kv.arena)
     d = drift.report()

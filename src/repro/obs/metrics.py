@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import json
 import math
-from typing import Optional, Sequence
+from contextlib import contextmanager
+from typing import Iterator, Optional, Sequence
 
 DEFAULT_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
                    10.0, 25.0, 50.0, 100.0)
@@ -203,3 +204,34 @@ class MetricsRegistry:
 
     def to_json_text(self) -> str:
         return json.dumps(self.to_json(), indent=2, sort_keys=True)
+
+
+# -- module-global active registry ----------------------------------------------
+# Mirrors the tracer's active-instance pattern: drivers (launch/*, the bench
+# orchestrator's --metrics flag) install one registry, and components that
+# default their ``registry`` argument (``ServeMetrics``, the tracer's drop
+# counter) aggregate into it instead of each owning a private scrape.
+_ACTIVE: Optional[MetricsRegistry] = None
+
+
+def get_registry() -> Optional[MetricsRegistry]:
+    """The active registry, or None (components fall back to private ones)."""
+    return _ACTIVE
+
+
+def set_registry(registry: Optional[MetricsRegistry]) -> Optional[MetricsRegistry]:
+    """Install (or clear, with None) the active registry; returns the
+    previous one so callers can restore it."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, registry
+    return prev
+
+
+@contextmanager
+def use_registry(registry: MetricsRegistry) -> Iterator[MetricsRegistry]:
+    """Temporarily install ``registry`` as the active one."""
+    prev = set_registry(registry)
+    try:
+        yield registry
+    finally:
+        set_registry(prev)

@@ -23,10 +23,13 @@ tenants, scheduler, engine, individual decode slots.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Optional
+
+from . import metrics as _metrics
 
 DEFAULT_CAPACITY = 65_536
 
@@ -60,7 +63,12 @@ class Tracer:
     """
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 registry: Optional["_metrics.MetricsRegistry"] = None):
+        """``registry``: where the drop counter is surfaced
+        (``trace_dropped_events_total``).  Defaults to the active registry
+        (``obs.metrics.get_registry()``) at first-drop time, so long
+        scenario runs can't silently lose spans."""
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
@@ -69,6 +77,9 @@ class Tracer:
         self._ring: deque[TraceEvent] = deque(maxlen=capacity)
         self.n_emitted = 0
         self.step = -1          # current step stamp; see set_step()
+        self._registry = registry
+        self._drop_counter = None
+        self._warned_drop = False
 
     # -- clocks -----------------------------------------------------------------
     def now_us(self) -> float:
@@ -80,8 +91,31 @@ class Tracer:
 
     # -- emission ---------------------------------------------------------------
     def emit(self, event: TraceEvent) -> None:
+        if len(self._ring) == self.capacity:
+            self._on_drop()
         self._ring.append(event)
         self.n_emitted += 1
+
+    def _on_drop(self) -> None:
+        """The ring is full: the oldest event is about to be lost.  Warn
+        once (so a long scenario run never silently truncates its spans)
+        and count every drop on the metrics registry."""
+        if not self._warned_drop:
+            self._warned_drop = True
+            warnings.warn(
+                f"Tracer ring buffer full (capacity={self.capacity}): "
+                "oldest events are being dropped; exported spans may be "
+                "truncated.  Raise Tracer(capacity=...) for long runs.",
+                RuntimeWarning, stacklevel=4)
+        if self._drop_counter is None:
+            reg = self._registry if self._registry is not None \
+                else _metrics.get_registry()
+            if reg is None:
+                return
+            self._drop_counter = reg.counter(
+                "trace_dropped_events_total",
+                "trace events dropped by the ring buffer")
+        self._drop_counter.inc()
 
     def instant(self, name: str, cat: str, track: str = "main",
                 **args) -> None:

@@ -13,15 +13,18 @@ Public API:
   - scheduler: GenRequest, Scheduler, RequestState
   - engine:    ServeEngine (relocated from repro.runtime.serve_lib)
   - metrics:   ServeMetrics
+  - loadgen:   LoadGen, LoadSpec, TrafficClass (seeded trace-replay traffic)
 """
 from .engine import ServeEngine
+from .loadgen import LoadGen, LoadSpec, LoadTrace, TrafficClass, make_loadgen
 from .metrics import ServeMetrics
 from .pages import (PagePlan, PagedKVCache, PagePoolExhausted,
                     choose_page_tokens, paged_request_blocks, plan_pool)
 from .scheduler import GenRequest, RequestState, Scheduler
 
 __all__ = [
-    "GenRequest", "PagePlan", "PagePoolExhausted", "PagedKVCache",
-    "RequestState", "Scheduler", "ServeEngine", "ServeMetrics",
-    "choose_page_tokens", "paged_request_blocks", "plan_pool",
+    "GenRequest", "LoadGen", "LoadSpec", "LoadTrace", "PagePlan",
+    "PagePoolExhausted", "PagedKVCache", "RequestState", "Scheduler",
+    "ServeEngine", "ServeMetrics", "TrafficClass", "choose_page_tokens",
+    "make_loadgen", "paged_request_blocks", "plan_pool",
 ]

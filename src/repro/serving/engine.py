@@ -66,8 +66,13 @@ class ServeEngine:
             hbm_budget = self.kv.tenant.budget
         cap = None
         if hbm_budget is not None:
+            # the scheduler clamps to max_batch anyway, so bound the feasible-
+            # batch search there: each probe packs a b-request wave (~quadratic
+            # in its page count) and an uncapped search under a generous budget
+            # explores thousands of requests for an answer that gets clamped
             cap = pages_lib.max_concurrency(acct, sample_trace,
-                                            self.kv.page_tokens, hbm_budget)
+                                            self.kv.page_tokens, hbm_budget,
+                                            hi=max_batch)
         self.sched = Scheduler(self.kv, max_batch=max_batch, policy=policy,
                                max_concurrency=cap, prefill_chunk=prefill_chunk)
         self.metrics = metrics if metrics is not None else ServeMetrics()
@@ -85,6 +90,10 @@ class ServeEngine:
                                 self.step_count)
         t = get_tracer()
         if t is not None:
+            # enqueue happens between engine steps: stamp the step the
+            # request will first be visible to, so span accounting (queue =
+            # admit_step - enqueue_step) matches ServeMetrics exactly
+            t.set_step(self.step_count)
             t.instant("enqueue", "serving", track="queue", rid=req.rid,
                       prompt_len=int(req.prompt.shape[0]),
                       queue_depth=self.sched.queue_depth)
@@ -119,7 +128,8 @@ class ServeEngine:
             return
         cap = pages_lib.max_concurrency(self._acct, self._sample_trace,
                                         self.kv.page_tokens,
-                                        self.kv.tenant.budget)
+                                        self.kv.tenant.budget,
+                                        hi=self.max_batch)
         self.sched.cap = max(1, min(self.max_batch, cap))
 
     def _model_prefill(self, sr: ScheduledRequest) -> None:

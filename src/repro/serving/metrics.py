@@ -17,7 +17,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
-from ..obs.metrics import MetricsRegistry
+from ..obs.metrics import MetricsRegistry, get_registry
 
 TTFT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 QUEUE_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128)
@@ -50,6 +50,10 @@ class RequestMetrics:
 class ServeMetrics:
     def __init__(self, registry: Optional[MetricsRegistry] = None,
                  clock: Optional[Callable[[], float]] = None):
+        if registry is None:
+            # aggregate into the driver-installed registry when one is
+            # active (benchmarks/run.py --metrics); else stay private
+            registry = get_registry()
         self.registry = registry if registry is not None else MetricsRegistry()
         self._clock = clock if clock is not None else time.perf_counter
         self.requests: dict[int, RequestMetrics] = {}
@@ -85,36 +89,48 @@ class ServeMetrics:
         self._h_queue = r.histogram(
             "serve_queue_depth", "waiting-queue depth sampled per step",
             buckets=QUEUE_BUCKETS)
+        # a shared registry aggregates counters across engines (that is the
+        # point of the scrape); this instance's own view must stay
+        # per-engine even when several engines write the same registry, so
+        # the summary fields are plain local tallies and the registry
+        # counters are incremented alongside for export only
+        self._n_steps = 0
+        self._n_decode = 0
+        self._n_prefill = 0
+        self._n_preempt = 0
+        self._n_discard = 0
+        self._max_concurrent = 0
 
-    # registry-backed views of the old dataclass fields (engine mutates
+    # per-engine views of the old dataclass fields (engine mutates
     # ``n_prefill_tokens`` in place, hence the setter)
     @property
     def n_steps(self) -> int:
-        return int(self._c_steps.value)
+        return self._n_steps
 
     @property
     def n_decode_tokens(self) -> int:
-        return int(self._c_decode.value)
+        return self._n_decode
 
     @property
     def n_prefill_tokens(self) -> int:
-        return int(self._c_prefill.value)
+        return self._n_prefill
 
     @n_prefill_tokens.setter
     def n_prefill_tokens(self, value: int) -> None:
-        self._c_prefill.set(value)
+        self._c_prefill.inc(value - self._n_prefill)
+        self._n_prefill = value
 
     @property
     def n_preemptions(self) -> int:
-        return int(self._c_preempt.value)
+        return self._n_preempt
 
     @property
     def n_discarded_tokens(self) -> int:
-        return int(self._c_discard.value)
+        return self._n_discard
 
     @property
     def max_concurrent(self) -> int:
-        return int(self._g_concurrent_max.value)
+        return self._max_concurrent
 
     # -- recording ---------------------------------------------------------------
     def on_enqueue(self, rid: int, prompt_len: int, step: int) -> None:
@@ -135,12 +151,15 @@ class ServeMetrics:
 
     def on_token(self, rid: int) -> None:
         self.requests[rid].n_generated += 1
+        self._n_decode += 1
         self._c_decode.inc()
 
     def on_preempt(self, rid: int, discarded_tokens: int = 0) -> None:
         """``discarded_tokens``: generated output thrown away by the eviction
         (recompute-on-resume), so throughput can separate work from goodput."""
         self.requests[rid].n_preempt += 1
+        self._n_preempt += 1
+        self._n_discard += discarded_tokens
         self._c_preempt.inc()
         self._c_discard.inc(discarded_tokens)
 
@@ -150,7 +169,9 @@ class ServeMetrics:
 
     def on_step(self, concurrent: int, occupancy: float,
                 queue_depth: int) -> None:
+        self._n_steps += 1
         self._c_steps.inc()
+        self._max_concurrent = max(self._max_concurrent, concurrent)
         self._g_concurrent.set(concurrent)
         self._g_concurrent_max.set_max(concurrent)
         self._g_occupancy.set(occupancy)

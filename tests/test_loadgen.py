@@ -1,0 +1,114 @@
+"""repro.serving.loadgen: determinism, arrival processes, class mixes."""
+import numpy as np
+import pytest
+
+from repro.serving import LoadGen, LoadSpec, TrafficClass, make_loadgen
+
+CLASSES = (TrafficClass("interactive", priority=1, weight=0.4),
+           TrafficClass("batch", priority=0, weight=0.6))
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "diurnal", "burst"])
+def test_same_spec_yields_byte_identical_trace(arrival):
+    spec = LoadSpec(n_requests=64, arrival=arrival, classes=CLASSES, seed=7)
+    a = LoadGen(spec).trace().to_bytes()
+    b = LoadGen(spec).trace().to_bytes()
+    assert a == b                                 # the determinism witness
+    assert a != LoadGen(LoadSpec(n_requests=64, arrival=arrival,
+                                 classes=CLASSES, seed=8)).trace().to_bytes()
+
+
+def test_gen_requests_are_deterministic_and_leave_trace_unchanged():
+    spec = LoadSpec(n_requests=16, seed=3)
+    lg = LoadGen(spec)
+    lt = lg.trace()
+    before = lt.to_bytes()
+    r1 = lg.gen_requests(vocab_size=512, gen_jitter=4, trace=lt)
+    r2 = lg.gen_requests(vocab_size=512, gen_jitter=4, trace=lt)
+    assert lt.to_bytes() == before                # jitter stream is separate
+    for a, b in zip(r1, r2):
+        assert a.rid == b.rid and a.gen_len == b.gen_len
+        assert np.array_equal(a.prompt, b.prompt)
+        assert a.prompt.dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# arrival processes + length distributions
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_arrivals_are_sorted_at_requested_rate():
+    spec = LoadSpec(n_requests=400, arrival="poisson", mean_interarrival=2.0,
+                    seed=0)
+    reqs = LoadGen(spec).trace().requests
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+    # mean inter-arrival within 20% of the spec over 400 samples
+    assert (arr[-1] - arr[0]) / (len(arr) - 1) == pytest.approx(2.0, rel=0.2)
+
+
+def test_diurnal_arrivals_modulate_rate():
+    spec = LoadSpec(n_requests=600, arrival="diurnal", mean_interarrival=2.0,
+                    diurnal_period=64, diurnal_depth=0.8, seed=1)
+    arr = [r.arrival for r in LoadGen(spec).trace().requests]
+    assert arr == sorted(arr)
+    # rush hours vs valleys: count arrivals in the sin>0 half-cycles vs the
+    # sin<0 half-cycles of each period — the former must dominate
+    peak = sum(1 for t in arr if (t % 64) < 32)
+    trough = len(arr) - peak
+    assert peak > 1.3 * trough
+
+
+def test_burst_arrivals_land_in_first_steps():
+    spec = LoadSpec(n_requests=12, arrival="burst", seed=0)
+    arr = [r.arrival for r in LoadGen(spec).trace().requests]
+    assert set(arr) <= {0, 1, 2}
+
+
+def test_lognormal_lengths_respect_bounds():
+    spec = LoadSpec(n_requests=500, prompt_mean=32, prompt_sigma=1.2,
+                    prompt_max=64, gen_mean=12, gen_sigma=1.0, gen_max=40,
+                    seed=2)
+    reqs = LoadGen(spec).trace().requests
+    assert all(1 <= r.prompt_len <= 64 for r in reqs)
+    assert all(2 <= r.gen_len <= 40 for r in reqs)
+    # long tail: the cap actually binds somewhere in 500 draws
+    assert any(r.prompt_len == 64 for r in reqs)
+    assert len({r.prompt_len for r in reqs}) > 10
+
+
+def test_invalid_spec_rejected():
+    with pytest.raises(ValueError):
+        LoadSpec(arrival="constant")
+    with pytest.raises(ValueError):
+        LoadSpec(n_requests=0)
+
+
+# ---------------------------------------------------------------------------
+# traffic classes
+# ---------------------------------------------------------------------------
+
+
+def test_classes_tag_requests_and_set_priorities():
+    lg = make_loadgen("poisson", 300, seed=5, classes=CLASSES)
+    lt = lg.trace()
+    names = {lt.class_of[r.rid] for r in lt.requests}
+    assert names == {"interactive", "batch"}
+    counts = {n: sum(1 for v in lt.class_of.values() if v == n)
+              for n in names}
+    assert counts["batch"] > counts["interactive"]     # weight 0.6 vs 0.4
+    prio = {"interactive": 1, "batch": 0}
+    for g in lg.gen_requests(vocab_size=128, trace=lt):
+        assert g.priority == prio[lt.class_of[g.rid]]
+
+
+def test_untagged_spec_has_no_classes():
+    lt = make_loadgen("poisson", 8, seed=0).trace()
+    assert lt.class_of == {}
+    assert all(g.priority == 0
+               for g in LoadGen(lt.spec).gen_requests(vocab_size=64))

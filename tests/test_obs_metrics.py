@@ -163,10 +163,13 @@ def test_counters_live_in_the_registry():
     assert j["serve_ttft_steps"]["count"] == 1
     text = reg.to_prometheus_text()
     assert "serve_decode_tokens_total 6" in text
-    # a shared registry aggregates across engines
+    # a shared registry aggregates across engines in the scrape...
     m2 = ServeMetrics(registry=reg, clock=clk)
     m2.on_enqueue(9, 4, 0)
     m2.on_token(9)
     assert reg.to_json()["serve_decode_tokens_total"]["value"] == 7
-    # ...which is visible through both views (shared counters)
-    assert m.n_decode_tokens == m2.n_decode_tokens == 7
+    # ...but each instance's own view stays per-engine (deltas from its
+    # construction point), so summaries don't inherit a neighbour's work
+    assert m.n_decode_tokens == 6
+    assert m2.n_decode_tokens == 1
+    assert m2.summary()["tokens"] == 1

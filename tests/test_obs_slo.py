@@ -1,0 +1,141 @@
+"""repro.obs.slo: streaming-histogram accuracy, SLO attainment, goodput."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.obs import (MetricsRegistry, SLOEngine, SLOSpec, SpanTracker,
+                       StreamingHistogram)
+from repro.obs.trace import PH_INSTANT, TraceEvent
+
+
+# ---------------------------------------------------------------------------
+# StreamingHistogram
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_percentiles_match_numpy_within_bucket_error():
+    """Geometric buckets (growth 1.04) bound relative quantile error; allow
+    2x slack for the rank convention difference vs numpy's interpolation."""
+    rng = random.Random(0)
+    samples = [rng.lognormvariate(3.0, 0.8) for _ in range(20_000)]
+    h = StreamingHistogram()
+    for v in samples:
+        h.observe(v)
+    for q in (0.5, 0.9, 0.95, 0.99):
+        est = h.quantile(q)
+        exact = float(np.quantile(samples, q))
+        assert est == pytest.approx(exact, rel=0.08), f"q={q}"
+
+
+def test_histogram_tracks_exact_moments():
+    h = StreamingHistogram()
+    for v in (1.0, 2.0, 3.0, 10.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.mean == pytest.approx(4.0)
+    assert h.min == 1.0 and h.max == 10.0
+
+
+def test_histogram_clamps_to_observed_range():
+    h = StreamingHistogram()
+    h.observe(7.0)
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == 7.0
+
+
+def test_histogram_absorbs_zeros():
+    h = StreamingHistogram()
+    for _ in range(10):
+        h.observe(0.0)
+    h.observe(100.0)
+    assert h.quantile(0.5) == 0.0
+    assert h.quantile(1.0) == 100.0
+
+
+def test_histogram_empty_and_invalid():
+    h = StreamingHistogram()
+    assert h.quantile(0.5) is None
+    assert h.to_dict()["min"] is None
+    with pytest.raises(ValueError):
+        h.observe(-1.0)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        StreamingHistogram(growth=1.0)
+
+
+# ---------------------------------------------------------------------------
+# SLOSpec
+# ---------------------------------------------------------------------------
+
+
+def test_spec_ceilings():
+    spec = SLOSpec(ttft_steps=4, tpot_steps=2.0)
+    assert spec.met(4, 2.0, None)
+    assert not spec.met(5, 2.0, None)
+    assert not spec.met(4, 2.1, None)
+    assert not spec.met(None, 2.0, None)      # ceiling set, metric missing
+    assert SLOSpec().met(None, None, None)    # no ceilings: everything meets
+
+
+# ---------------------------------------------------------------------------
+# SLOEngine
+# ---------------------------------------------------------------------------
+
+
+def test_attainment_and_goodput():
+    eng = SLOEngine(SLOSpec(ttft_steps=2))
+    assert eng.observe(ttft_steps=1, tpot_steps=1.0, e2e_steps=5, tokens=10)
+    assert not eng.observe(ttft_steps=9, tpot_steps=1.0, e2e_steps=12,
+                           tokens=10)
+    rep = eng.report(n_steps=20, wall_s=2.0)
+    assert rep["n_requests"] == 2 and rep["n_met"] == 1
+    assert rep["attainment"] == 0.5
+    assert rep["tokens"] == 20 and rep["goodput_tokens"] == 10
+    assert rep["goodput_tokens_per_step"] == 0.5
+    assert rep["goodput_tokens_per_s"] == 5.0
+    assert rep["ttft_steps"]["count"] == 2
+
+
+def test_per_class_breakdown_and_registry_counters():
+    reg = MetricsRegistry()
+    eng = SLOEngine([SLOSpec(name="interactive", ttft_steps=2),
+                     SLOSpec(name="batch", e2e_steps=50)], registry=reg)
+    eng.observe(ttft_steps=1, tpot_steps=1.0, e2e_steps=5, tokens=4,
+                slo_class="interactive")
+    eng.observe(ttft_steps=30, tpot_steps=2.0, e2e_steps=40, tokens=16,
+                slo_class="batch")
+    rep = eng.report()
+    assert rep["classes"]["interactive"]["attainment"] == 1.0
+    assert rep["classes"]["batch"]["attainment"] == 1.0
+    assert rep["classes"]["batch"]["goodput_tokens"] == 16
+    # counters are scrape-able with the class label
+    text = reg.to_prometheus_text()
+    assert 'slo_requests_met_total{slo_class="interactive"} 1' in text
+    assert 'slo_goodput_tokens_total{slo_class="batch"} 16' in text
+
+
+def test_unknown_class_falls_back_to_default():
+    eng = SLOEngine(SLOSpec(name="default", ttft_steps=10))
+    assert eng.observe(ttft_steps=1, tpot_steps=None, e2e_steps=None,
+                       tokens=1, slo_class="nope")
+    assert eng.report()["classes"]["default"]["n_requests"] == 1
+
+
+def test_observe_spans_skips_unfinished_and_truncated():
+    def ev(name, step, **args):
+        return TraceEvent(name=name, cat="serving", ph=PH_INSTANT,
+                          ts=float(step), step=step, args=args)
+    tracker = SpanTracker().feed([
+        ev("enqueue", 0, rid=1, prompt_len=8), ev("admit", 1, rid=1),
+        ev("prefill", 2, rid=1), ev("finish", 6, rid=1, n_tokens=5),
+        ev("enqueue", 3, rid=2, prompt_len=8),      # never finishes
+        ev("admit", 4, rid=3), ev("prefill", 5, rid=3),  # truncated
+        ev("finish", 8, rid=3, n_tokens=4),
+    ])
+    eng = SLOEngine(SLOSpec(ttft_steps=4))
+    n_met = eng.observe_spans(tracker.all_spans())
+    rep = eng.report()
+    assert rep["n_requests"] == 1 and n_met == 1
+    assert rep["goodput_tokens"] == 5

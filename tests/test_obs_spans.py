@@ -1,0 +1,188 @@
+"""repro.obs.spans: span folding, conservation, replan attribution, export."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import Transformer
+from repro.obs import (ChromeTraceBuilder, SpanTracker, Tracer,
+                       summarize_spans, use_tracer, validate_chrome_trace)
+from repro.obs.trace import PH_INSTANT, TraceEvent
+from repro.runtime.serve_lib import Request
+from repro.serving import GenRequest, ServeEngine
+
+
+def _ev(name, step, *, cat="serving", ts=None, **args):
+    return TraceEvent(name=name, cat=cat, ph=PH_INSTANT,
+                      ts=float(step if ts is None else ts), step=step,
+                      args=args)
+
+
+def _lifecycle(rid, enqueue, admit, prefill, finish, n_tokens=4):
+    return [_ev("enqueue", enqueue, rid=rid, prompt_len=8),
+            _ev("admit", admit, rid=rid),
+            _ev("prefill", prefill, rid=rid),
+            _ev("finish", finish, rid=rid, n_tokens=n_tokens)]
+
+
+# ---------------------------------------------------------------------------
+# folding + conservation (synthetic streams)
+# ---------------------------------------------------------------------------
+
+
+def test_simple_lifecycle_tiles_exactly():
+    tracker = SpanTracker().feed(_lifecycle(1, 0, 2, 3, 7))
+    (span,) = tracker.finished()
+    assert span.e2e_steps == 7
+    assert span.ttft_steps == 3
+    assert span.breakdown() == {"queue": 2, "prefill": 1, "decode": 4,
+                                "preempted": 0}
+    assert span.conserved()
+    assert tracker.conservation_violations() == []
+
+
+def test_tpot_is_decode_cadence():
+    tracker = SpanTracker().feed(_lifecycle(1, 0, 0, 1, 9, n_tokens=5))
+    (span,) = tracker.finished()
+    # 4 tokens after the first over steps 1..9
+    assert span.tpot_steps == pytest.approx((9 - 1) / (5 - 1))
+
+
+def test_preemption_gap_is_conserved_and_attributed():
+    events = [
+        _ev("enqueue", 0, rid=1, prompt_len=8),
+        _ev("admit", 1, rid=1),
+        _ev("prefill", 1, rid=1),
+        # the engine flags the arena before choosing a victim: the replan
+        # instant shares the preemption's step and carries the cause
+        _ev("replan-request", 4, cat="arena", cause="decode-outrun"),
+        _ev("preempt", 4, rid=1, grower=2),
+        _ev("admit", 6, rid=1),          # re-admitted: prefill recompute
+        _ev("prefill", 7, rid=1),
+        _ev("finish", 10, rid=1, n_tokens=9),
+    ]
+    tracker = SpanTracker().feed(events)
+    (span,) = tracker.finished()
+    assert span.n_preempt == 1
+    assert span.conserved()
+    assert span.breakdown() == {"queue": 1, "prefill": 1, "decode": 6,
+                                "preempted": 2}
+    assert span.stall_steps_by_cause() == {"decode-outrun": 2}
+    table = tracker.attribution()
+    assert table["decode-outrun"]["n_preemptions"] == 1
+    assert table["decode-outrun"]["stall_steps"] == 2
+    assert table["decode-outrun"]["rids"] == [1]
+
+
+def test_preempt_without_same_step_replan_is_unattributed():
+    events = [
+        _ev("enqueue", 0, rid=1, prompt_len=8),
+        _ev("admit", 0, rid=1),
+        _ev("prefill", 0, rid=1),
+        _ev("replan-request", 1, cat="arena", cause="decode-outrun"),
+        _ev("preempt", 3, rid=1),        # two steps later: not this replan
+        _ev("admit", 4, rid=1),
+        _ev("prefill", 4, rid=1),
+        _ev("finish", 6, rid=1, n_tokens=5),
+    ]
+    tracker = SpanTracker().feed(events)
+    assert tracker.attribution() == {
+        "unattributed": {"n_preemptions": 1, "stall_steps": 1, "rids": [1]}}
+    assert tracker.conservation_violations() == []
+
+
+def test_truncated_span_excluded_from_conservation():
+    """An admit whose enqueue fell off the ring buffer opens a truncated
+    span that later events still land on, but it never reaches finished()."""
+    events = [_ev("admit", 5, rid=9), _ev("prefill", 6, rid=9),
+              _ev("finish", 9, rid=9, n_tokens=3)]
+    tracker = SpanTracker().feed(events)
+    assert tracker.finished() == []
+    assert tracker.n_ignored == 1
+    (span,) = tracker.all_spans()
+    assert span.truncated and span.done
+
+
+def test_unfinished_span_is_not_a_violation():
+    tracker = SpanTracker().feed(_lifecycle(1, 0, 2, 3, 7)[:2])
+    assert tracker.finished() == []
+    assert tracker.conservation_violations() == []
+
+
+def test_summarize_spans_totals():
+    tracker = SpanTracker().feed(_lifecycle(1, 0, 2, 3, 7)
+                                 + _lifecycle(2, 1, 2, 4, 9))
+    s = summarize_spans(tracker.all_spans())
+    assert s["n_finished"] == 2
+    assert s["total_e2e_steps"] == 7 + 8
+    assert sum(s["total_steps_by_phase"].values()) == s["total_e2e_steps"]
+    assert s["conservation_violations"] == []
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+
+def test_span_export_is_valid_chrome_trace(tmp_path):
+    tracker = SpanTracker().feed(_lifecycle(1, 0, 2, 3, 7)
+                                 + _lifecycle(2, 1, 2, 4, 9))
+    events = tracker.to_events()
+    assert events and all(e.ph == "X" for e in events)
+    assert {e.track for e in events} == {"req 1", "req 2"}
+    tb = ChromeTraceBuilder()
+    tb.add_events(events)
+    doc = tb.write(str(tmp_path / "spans.json"))
+    validate_chrome_trace(doc)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: a real engine run conserves and attributes every span
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2-0.5b").smoke()
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_spans_conserved_and_attributed(tiny_model):
+    """Every finished request's phase tiling sums to its E2E latency, and
+    every preemption gap links to a cause-tagged §4.3 replan event."""
+    cfg, model, params = tiny_model
+    # profile says short generations -> tiny pool; live traffic outgrows it
+    trace = [Request(rid=1, prompt_len=8, gen_len=2, arrival=0),
+             Request(rid=2, prompt_len=8, gen_len=2, arrival=1),
+             Request(rid=3, prompt_len=8, gen_len=2, arrival=2)]
+    live = [GenRequest(rid=r.rid,
+                       prompt=jax.random.randint(jax.random.PRNGKey(r.rid),
+                                                 (r.prompt_len,), 0,
+                                                 cfg.vocab_size),
+                       gen_len=20, arrival=r.arrival)
+            for r in trace]
+    tracer = Tracer()
+    with use_tracer(tracer):
+        eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
+                          max_batch=3, page_tokens=4)
+        summary = eng.run(live, max_steps=2000)
+    assert summary["n_preemptions"] >= 1            # churn actually happened
+
+    tracker = SpanTracker().feed(tracer.events())
+    spans = tracker.finished()
+    assert len(spans) == 3
+    assert tracker.conservation_violations() == []
+    for span in spans:
+        assert span.conserved()
+        # span accounting agrees with the engine's own metrics
+        m = eng.metrics.requests[span.rid]
+        assert span.e2e_steps == m.finish_step - m.enqueue_step
+        assert span.ttft_steps == m.ttft_steps
+        assert span.n_preempt == m.n_preempt
+    # every preemption gap is attributed to a cause-tagged replan
+    table = tracker.attribution()
+    assert sum(r["n_preemptions"] for r in table.values()) \
+        == summary["n_preemptions"]
+    assert set(table) == {"decode-outrun"}
+    assert table["decode-outrun"]["stall_steps"] >= 1

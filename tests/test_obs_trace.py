@@ -38,13 +38,46 @@ except ImportError:          # pragma: no cover - CI installs hypothesis
 
 def test_ring_buffer_drops_oldest_and_accounts():
     t = Tracer(capacity=4, clock=ManualClock(tick=1e-6))
-    for i in range(10):
-        t.instant(f"e{i}", "arena")
+    with pytest.warns(RuntimeWarning, match="ring buffer full"):
+        for i in range(10):
+            t.instant(f"e{i}", "arena")
     evs = t.events()
     assert len(evs) == 4
     assert t.n_dropped == 6
     assert [e.name for e in evs] == ["e6", "e7", "e8", "e9"]
     assert t.stats()["n_emitted"] == 10
+
+
+def test_ring_buffer_drop_warns_once_and_counts_on_registry():
+    """Drops surface as a metrics counter + a single RuntimeWarning, so a
+    long run can't silently truncate its exported spans."""
+    from repro.obs import MetricsRegistry, use_registry
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        t = Tracer(capacity=2, clock=ManualClock(tick=1e-6))
+        with pytest.warns(RuntimeWarning, match="ring buffer full"):
+            for i in range(5):
+                t.instant(f"e{i}", "arena")
+    (c,) = [m for m in reg.metrics()
+            if m.name == "trace_dropped_events_total"]
+    assert c.value == t.n_dropped == 3
+    # the warning fires once, not per drop
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        t.instant("more", "arena")          # would raise if warned again
+
+
+def test_ring_buffer_drop_prefers_explicit_registry():
+    from repro.obs import MetricsRegistry, use_registry
+    mine, active = MetricsRegistry(), MetricsRegistry()
+    with use_registry(active):
+        t = Tracer(capacity=1, registry=mine, clock=ManualClock(tick=1e-6))
+        with pytest.warns(RuntimeWarning):
+            t.instant("a", "arena")
+            t.instant("b", "arena")
+    assert [m.name for m in mine.metrics()] == ["trace_dropped_events_total"]
+    assert active.metrics() == []
 
 
 def test_manual_clock_makes_timestamps_deterministic():
