@@ -13,9 +13,13 @@ trade-off lands by refreshing the baseline in the same PR:
      BENCH_scenarios.json benchmarks/baselines/
 
 Only deterministic metrics are compared (packed peaks, ratios, counts, and
-the scenario matrix's step-clock SLO numbers) — wall-clock throughput
-numbers are machine-dependent and excluded.  Baselines are quick-mode runs,
-matching what CI executes.
+the scenario matrix's step-clock SLO numbers) — raw wall-clock throughput
+numbers are machine-dependent and excluded.  The measured-execution section
+is gated on its deterministic parts (token counts, compile counts, the
+zero-retrace steady-state delta) plus one *same-run ratio*
+(``speedup_runner_vs_slab``: both sides timed on the same machine in the
+same process, so the ratio is comparable across machines — checked with a
+wide tolerance).  Baselines are quick-mode runs, matching what CI executes.
 """
 from __future__ import annotations
 
@@ -36,6 +40,20 @@ KEY_METRICS = [
     ("BENCH_serving.json", "engine.max_concurrent", "lower_is_worse", 0.0),
     ("BENCH_serving.json", "engine.tokens", "lower_is_worse", 0.0),
     ("BENCH_serving.json", "drift.peak_ratio", "higher_is_worse", 0.05),
+    # measured execution: runner vs slab on the same trace.  Token counts
+    # are exact (greedy, seeded); the steady-state compile delta *is* the
+    # zero-retrace invariant (baseline 0, any retrace warns); the speedup is
+    # a same-run ratio, so machine-comparable (wide tol for CPU jitter).
+    ("BENCH_serving.json", "measured.paged_runner.tokens",
+     "lower_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.paged_runner.n_completed",
+     "lower_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.paged_runner.runner_compiles_steady_delta",
+     "higher_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.paged_runner.prefill_compiles",
+     "higher_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.speedup_runner_vs_slab",
+     "lower_is_worse", 0.5),
     ("BENCH_remat.json", "configs.0.planned_vs_none", "higher_is_worse", 0.05),
     ("BENCH_remat.json", "configs.0.eviction.n_evicted", "higher_is_worse", 0.25),
     ("BENCH_remat.json", "max_feasible_batch.max_batch_remat",
@@ -60,6 +78,13 @@ KEY_METRICS = [
      "higher_is_worse", 0.5),
     ("BENCH_scenarios.json", "cells.qwen2-burst-tight.n_completed",
      "lower_is_worse", 0.0),
+    # zero-retrace invariant under scenario churn (baseline 0 retraces)
+    ("BENCH_scenarios.json",
+     "cells.qwen2-poisson.measured.runner_compiles_steady_delta",
+     "higher_is_worse", 0.0),
+    ("BENCH_scenarios.json",
+     "cells.qwen2-burst-tight.measured.runner_compiles_steady_delta",
+     "higher_is_worse", 0.0),
 ]
 
 

@@ -58,6 +58,7 @@ class Scenario:
     max_batch: int = 8
     prefill_chunk: int = 16
     gen_jitter: int = 4
+    use_runner: bool = True             # bucketed pre-compiled decode ladder
     seed: int = 0
     # SLO ceilings on the step clock (per class when use_classes); chosen
     # to sit mid-range against the quick-mode distributions so attainment
@@ -165,7 +166,9 @@ def run_cell(sc: Scenario, quick: bool, trace_dir: str = ".") -> dict:
         eng = ServeEngine(model, params, sample_trace=sample, max_len=64,
                           max_batch=sc.max_batch, page_tokens=sc.page_tokens,
                           policy=sc.policy, prefill_chunk=sc.prefill_chunk,
-                          shared=shared)
+                          shared=shared, use_runner=sc.use_runner)
+        eng.warmup()                    # AOT-compile the decode ladder
+        warm_compiles = eng.runner.n_compiles if eng.runner else 0
         summary = eng.run(live, max_steps=20_000)
     wall_s = time.perf_counter() - t0
 
@@ -219,6 +222,20 @@ def run_cell(sc: Scenario, quick: bool, trace_dir: str = ".") -> dict:
         "trace_events": len(tracer.events()),
         "trace_dropped": tracer.n_dropped,
         "wall_s": wall_s,
+        # measured execution (not planned-bytes): what the clock saw while
+        # this cell actually decoded, plus the zero-retrace invariant
+        "measured": {
+            "use_runner": sc.use_runner,
+            "tokens": summary["tokens"],
+            "tokens_per_s": summary["tokens_per_s"],
+            "decode_steps": eng.decode_steps,
+            "decode_step_ms": 1e3 * eng.decode_time_s
+            / max(1, eng.decode_steps),
+            "prefill_compiles": eng.prefill_compiles,
+            "runner_compiles_warmup": warm_compiles,
+            "runner_compiles_steady_delta": (
+                eng.runner.n_compiles - warm_compiles if eng.runner else 0),
+        },
     }
     if shared is not None:
         sp = shared.plan()
@@ -253,6 +270,8 @@ def main(quick: bool = False, only: str = "", trace_dir: str = ".") -> dict:
                    f"ttft_p50={ttft.get('p50')};ttft_p99={ttft.get('p99')};"
                    f"preempt={rec['n_preemptions']};"
                    f"replans={sum(rec['replan_causes'].values())};"
+                   f"step_ms={rec['measured']['decode_step_ms']:.2f};"
+                   f"retraces={rec['measured']['runner_compiles_steady_delta']};"
                    f"conserved={not rec['conservation_violations']}")
         print(f"scenario/{sc.name},{rec['wall_s'] * 1e6:.0f},{derived}")
     out = {

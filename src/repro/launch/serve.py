@@ -12,12 +12,21 @@ slab-per-request baseline).
 ``--share-hbm GB``: one budget, two workloads — a fine-tune step of the same
 (reduced) model is registered as the training tenant of a ``SharedArena``,
 the page pool becomes the serving tenant, and admission is gated against the
-serving share of the jointly planned split.
+serving share of the jointly planned split.  The loop then *executes* the
+joint plan: real jitted fine-tune steps run at the valley phases
+``SharedPlan.schedule`` picked, interleaved with engine decode steps in one
+process, and both workloads' measured step times are reported.
+
+``--runner`` (default): decode replays the pre-compiled bucketed
+``DecodeRunner`` ladder — steady state performs zero retraces
+(``runner_compile_total`` stays flat after warmup).  ``--no-runner`` falls
+back to the legacy full-batch decode jit for comparison.
 """
 from __future__ import annotations
 
 import argparse
 import random
+import time
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +39,57 @@ from ..obs import (ChromeTraceBuilder, DriftMonitor, SLOEngine, SLOSpec,
 from ..runtime.serve_lib import ServingArena, synth_trace
 from ..serving import GenRequest, ServeEngine
 from .train import reduced_config
+
+
+def make_train_step(model, params, seq: int, batch: int, lr: float = 1e-3,
+                    seed: int = 0):
+    """One real jitted SGD fine-tune step on a private params replica (the
+    training tenant's executable; serving keeps decoding its own weights)."""
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 7),
+                                (batch, seq + 1), 0, model.cfg.vocab_size)
+    tbatch = {"tokens": tokens}
+
+    @jax.jit
+    def ft(p):
+        loss, grads = jax.value_and_grad(
+            lambda q: model.loss_fn(q, tbatch, remat=False)[0])(p)
+        return loss, jax.tree.map(lambda a, g: a - lr * g, p, grads)
+
+    state = {"p": jax.tree.map(jnp.asarray, params)}
+
+    def step():
+        loss, state["p"] = ft(state["p"])
+        return loss
+
+    return step
+
+
+def run_interleaved(eng, live, shared, train_step, max_steps: int = 100_000):
+    """Execute the joint plan: engine steps with fine-tune steps fired at the
+    valley phases the ``SharedArena`` scheduled, all in one process."""
+    jp = shared.plan()
+    window = max(1, jp.profile.meta.get("window_steps", 1))
+    phases = set(jp.schedule.get("training", []))
+    pending = sorted(live, key=lambda r: (r.arrival, r.rid))
+    train_s, n_train, last_loss = 0.0, 0, None
+    while pending or not eng.sched.idle:
+        while pending and pending[0].arrival <= eng.step_count:
+            eng.enqueue(pending.pop(0))
+        eng.step()
+        if phases and (eng.step_count - 1) % window in phases:
+            t0 = time.perf_counter()
+            last_loss = float(jax.block_until_ready(train_step()))
+            train_s += time.perf_counter() - t0
+            n_train += 1
+        if eng.step_count >= max_steps:
+            raise RuntimeError(f"engine did not drain in {max_steps} steps")
+    return eng.metrics.summary(eng.kv.stats()), {
+        "n_train_steps": n_train,
+        "train_step_ms_mean": 1e3 * train_s / n_train if n_train else None,
+        "train_loss": last_loss,
+        "window_steps": window,
+        "phases": sorted(phases),
+    }
 
 
 def main() -> None:
@@ -50,6 +110,10 @@ def main() -> None:
                          "fine-tune tenant (0 = serving owns its arena)")
     ap.add_argument("--train-steps", type=int, default=4,
                     help="--share-hbm: fine-tune steps per serving round")
+    ap.add_argument("--runner", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="decode via the pre-compiled bucketed DecodeRunner "
+                         "(--no-runner: legacy full-batch decode jit)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default="", metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run "
@@ -100,7 +164,14 @@ def main() -> None:
     eng = ServeEngine(model, params, sample_trace=trace, max_len=args.max_len,
                       max_batch=args.max_batch, page_tokens=args.page_tokens,
                       policy=args.policy, prefill_chunk=args.prefill_chunk,
-                      accounting_cfg=full_cfg, shared=shared)
+                      accounting_cfg=full_cfg, shared=shared,
+                      use_runner=args.runner)
+    if args.runner:
+        t0 = time.perf_counter()
+        eng.warmup()
+        print(f"[runner] buckets={list(eng.runner.buckets)} warmed "
+              f"{eng.runner.n_compiles} compiles in "
+              f"{time.perf_counter() - t0:.1f}s")
     kv = eng.kv.stats()
     print(f"[paged pool] page_tokens={kv['page_tokens']} "
           f"n_pages={kv['n_pages']} pool={kv['pool_bytes'] / 1e6:.2f}MB "
@@ -129,8 +200,15 @@ def main() -> None:
     want_slo = any(v is not None
                    for v in (args.slo_ttft, args.slo_tpot, args.slo_e2e))
     tracer = Tracer() if (args.trace or want_slo) else None
+    colocated = None
     with use_tracer(tracer):
-        summary = eng.run(live)
+        if shared is not None:
+            # execute the joint plan: fine-tune steps at the valley phases
+            train_step = make_train_step(model, params, seq, batch,
+                                         seed=args.seed)
+            summary, colocated = run_interleaved(eng, live, shared, train_step)
+        else:
+            summary = eng.run(live)
     tracker = None
     if tracer is not None:
         # fold the event stream into per-request spans (queue/prefill/
@@ -171,6 +249,20 @@ def main() -> None:
           f"replans={d['n_replans']} causes={d['replan_causes']}")
     if args.metrics:
         print(eng.metrics.registry.to_prometheus_text(), end="")
+    if eng.decode_steps:
+        mode = "runner" if args.runner else "legacy"
+        compiles = (eng.runner.n_compiles if eng.runner is not None
+                    else eng.decode_compiles)
+        print(f"[decode:{mode}] steps={eng.decode_steps} "
+              f"step_ms={1e3 * eng.decode_time_s / eng.decode_steps:.2f} "
+              f"compiles={compiles} prefill_compiles={eng.prefill_compiles}")
+    if colocated is not None:
+        tms = colocated["train_step_ms_mean"]
+        print(f"[colocated] train_steps={colocated['n_train_steps']} "
+              f"at phases {colocated['phases']} "
+              f"(window={colocated['window_steps']}) "
+              f"train_step_ms={'n/a' if tms is None else f'{tms:.1f}'} "
+              f"loss={colocated['train_loss']}")
     ttft = summary["ttft_steps_mean"]
     print(f"completed {summary['n_completed']}/{summary['n_requests']} "
           f"requests, {summary['tokens']} tokens in {summary['wall_s']:.1f}s "

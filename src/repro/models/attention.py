@@ -167,6 +167,10 @@ def attend(q, k, v, *, impl="full", causal=True, window=0, q_offset=0,
 def attend_decode(q, k_cache, v_cache, cache_pos, *, window=0, rolling=False):
     """q: (B,1,kv,g,hd); caches: (B,C,kv,hd); positions < cache_pos are valid.
 
+    ``cache_pos`` is a scalar (one shared clock) or a (B,) vector of per-slot
+    positions — staggered admissions give every batch row its own clock, so
+    the validity mask is computed per row.
+
     ``rolling=True`` means the cache is a circular window buffer (local
     attention at long context); validity is then positional-age based and
     already guaranteed by construction, so only the fill mask applies.
@@ -176,12 +180,13 @@ def attend_decode(q, k_cache, v_cache, cache_pos, *, window=0, rolling=False):
     s = jnp.einsum("bqkgh,bskh->bkgqs", q, k_cache).astype(jnp.float32) * scale
     c = k_cache.shape[1]
     idx = jnp.arange(c)
+    pos = jnp.asarray(cache_pos).reshape(-1, 1)         # (B,1) or (1,1)
     if rolling:
-        valid = idx < jnp.minimum(cache_pos + 1, c)
+        valid = idx[None, :] < jnp.minimum(pos + 1, c)
     else:
-        valid = idx <= cache_pos
+        valid = idx[None, :] <= pos
         if window:
-            valid &= idx > (cache_pos - window)
-    s = s + jnp.where(valid[None, None, None, None, :], 0.0, NEG_INF)
+            valid &= idx[None, :] > (pos - window)
+    s = s + jnp.where(valid[:, None, None, None, :], 0.0, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     return jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)

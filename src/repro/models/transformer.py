@@ -472,7 +472,7 @@ class Transformer:
             return jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
 
-        cache = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        cache = {"pos": jax.ShapeDtypeStruct((batch,), jnp.int32)}
         if cfg.block_pattern:
             cache["pattern"] = {
                 str(i): stack_sds(self._block_cache_schema(kind, batch, max_len), g)
@@ -488,7 +488,9 @@ class Transformer:
 
     # ---- per-block decode ------------------------------------------------------
     def _apply_block_decode(self, kind, x, p, cache, pos, rope_cs):
-        """x: (B,1,D); cache: this block's entries; pos: scalar int32."""
+        """x: (B,1,D); cache: this block's entries; pos: (B,) int32 — every
+        batch row advances on its own position clock, so staggered admissions
+        with unequal prompt lengths attend (and write) at their own offsets."""
         cfg, dt = self.cfg, self.compute_dtype
         new_cache = dict(cache)
         if kind in ("attn", "local", "xattn"):
@@ -499,10 +501,9 @@ class Transformer:
                 k = attn.apply_rope(k, *rope_cs)
             c = cache["k"].shape[1]
             slot = jnp.mod(pos, c) if kind == "local" else jnp.minimum(pos, c - 1)
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k, (0, slot, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v, (0, slot, 0, 0))
+            rows = jnp.arange(k.shape[0])
+            k_cache = cache["k"].at[rows, slot].set(k[:, 0])
+            v_cache = cache["v"].at[rows, slot].set(v[:, 0])
             new_cache["k"], new_cache["v"] = k_cache, v_cache
             window = cfg.local_window if kind == "local" else 0
             ctx = attn.attend_decode(q, k_cache, v_cache, pos, window=window,
@@ -539,11 +540,15 @@ class Transformer:
 
     # ---- public: decode (one token for every sequence in the batch) --------------
     def decode_step(self, params, cache, tokens):
-        """tokens: (B,) int32 -> (logits (B, V), new cache)."""
+        """tokens: (B,) int32 -> (logits (B, V), new cache).
+
+        ``cache["pos"]`` is a (B,) per-slot position vector: each row attends
+        at its own offset, so a batch mixing requests admitted at different
+        times (unequal prompt lengths) decodes exactly."""
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed_in(params, tokens[:, None])
-        rope_cs = self._rope(pos[None, None])
+        rope_cs = self._rope(pos[:, None])
 
         pattern = cfg.block_pattern
         new_cache = {"pos": pos + 1}
@@ -572,9 +577,18 @@ class Transformer:
 
     # ---- public: prefill -----------------------------------------------------------
     def prefill(self, params, batch, max_len: Optional[int] = None):
-        """batch: {"tokens": (B,S)[, "frames": ...]} -> (last-pos logits, cache)."""
+        """batch: {"tokens": (B,S)[, "frames": ..., "true_len": scalar]}
+        -> (last-pos logits, cache).
+
+        ``true_len`` (traced scalar) supports length-bucketed prompts: tokens
+        beyond it are padding — the returned logits are read at position
+        ``true_len - 1`` and the cache position starts there, so the padded
+        tail is masked out of every subsequent decode step until it is
+        overwritten.  Only attention caches are pad-safe (recurrent state
+        integrates every input token); callers gate on the architecture."""
         cfg = self.cfg
         tokens = batch["tokens"]
+        true_len = batch.get("true_len")
         b, s = tokens.shape
         max_len = max_len or s
         x = self._embed_in(params, tokens)
@@ -647,7 +661,8 @@ class Transformer:
                 return x + y, st
             raise ValueError(kind)
 
-        cache = {"pos": jnp.asarray(s, jnp.int32)}
+        pos0 = jnp.asarray(s if true_len is None else true_len, jnp.int32)
+        cache = {"pos": jnp.broadcast_to(pos0, (b,))}
         pattern = cfg.block_pattern
         if pattern:
             def body(x, gp):
@@ -665,7 +680,12 @@ class Transformer:
                 tail[str(i)] = entry
             cache["tail"] = tail
         x = apply_norm(x, params["final_norm"], cfg.norm)
-        logits = self.logits(params, x[:, -1:, :])[:, 0, :]
+        if true_len is None:
+            last = x[:, -1:, :]
+        else:
+            last = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(true_len, jnp.int32) - 1, 1, axis=1)
+        logits = self.logits(params, last)[:, 0, :]
         return logits, cache
 
     # ---- public: inference forward (no cache) — smoke tests -----------------------------

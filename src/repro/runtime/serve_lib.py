@@ -28,8 +28,14 @@ from . import mesh_ctx, sharding_rules
 
 def build_prefill_step(model: Transformer, mesh: Optional[Mesh],
                        batch_sds: Optional[dict] = None,
-                       max_len: Optional[int] = None):
+                       max_len: Optional[int] = None,
+                       trace_hook=None):
+    """``trace_hook(batch)`` (if given) runs at *trace* time only — jit
+    replays compiled executables without re-entering Python, so the hook
+    fires exactly once per (shape, dtype) signature: a compile counter."""
     def prefill_fn(params, batch):
+        if trace_hook is not None:
+            trace_hook(batch)
         ctx = (mesh_ctx.use_mesh(mesh, rules=model.opts.mesh_rules())
                if mesh is not None else _null())
         with ctx:
@@ -52,11 +58,15 @@ def build_prefill_step(model: Transformer, mesh: Optional[Mesh],
 def build_decode_step(model: Transformer, mesh: Optional[Mesh],
                       batch: Optional[int] = None,
                       max_len: Optional[int] = None, donate: bool = True,
-                      shard_cache_len: bool = False):
+                      shard_cache_len: bool = False, trace_hook=None):
     """``shard_cache_len=True`` (§Perf): shard the KV-cache length axis over
     the model axis — decode attention reads 1/16th of the cache per chip and
-    GSPMD turns the softmax/context reductions into small all-reduces."""
+    GSPMD turns the softmax/context reductions into small all-reduces.
+
+    ``trace_hook(tokens)`` fires at trace time only (see build_prefill_step)."""
     def decode_fn(params, cache, tokens):
+        if trace_hook is not None:
+            trace_hook(tokens)
         ctx = (mesh_ctx.use_mesh(mesh, rules=model.opts.mesh_rules())
                if mesh is not None else _null())
         with ctx:

@@ -105,7 +105,7 @@ def _cache_leaf_axes(path: tuple, shape: tuple) -> tuple:
     elif name == "ssm":
         axes = ("batch", "ssm_heads", "head_dim", "state")
     elif name == "pos":
-        axes = ()
+        axes = ("batch",)           # per-slot position vector
     else:
         axes = (None,) * len(body)
     assert len(axes) == len(body), (path, shape, axes)

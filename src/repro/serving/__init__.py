@@ -20,11 +20,13 @@ from .loadgen import LoadGen, LoadSpec, LoadTrace, TrafficClass, make_loadgen
 from .metrics import ServeMetrics
 from .pages import (PagePlan, PagedKVCache, PagePoolExhausted,
                     choose_page_tokens, paged_request_blocks, plan_pool)
+from .runner import DecodeRunner, bucket_ladder
 from .scheduler import GenRequest, RequestState, Scheduler
 
 __all__ = [
-    "GenRequest", "LoadGen", "LoadSpec", "LoadTrace", "PagePlan",
-    "PagePoolExhausted", "PagedKVCache", "RequestState", "Scheduler",
-    "ServeEngine", "ServeMetrics", "TrafficClass", "choose_page_tokens",
-    "make_loadgen", "paged_request_blocks", "plan_pool",
+    "DecodeRunner", "GenRequest", "LoadGen", "LoadSpec", "LoadTrace",
+    "PagePlan", "PagePoolExhausted", "PagedKVCache", "RequestState",
+    "Scheduler", "ServeEngine", "ServeMetrics", "TrafficClass",
+    "bucket_ladder", "choose_page_tokens", "make_loadgen",
+    "paged_request_blocks", "plan_pool",
 ]

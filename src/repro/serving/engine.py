@@ -8,12 +8,17 @@ batched greedy decode, preempts on page-pool exhaustion, and replans the
 pool at epoch boundaries when observed generation lengths outgrow the
 profile (§4.3 under serving churn).
 
-Physical execution note (matches the seed engine): slot caches share the
-model's global position clock, so mid-stream admissions are approximate for
-unequal prompt lengths; memory accounting and scheduling are exact.
+Physical execution is exact for staggered admissions: ``cache["pos"]`` is a
+per-slot position vector, so every row attends and writes at its own offset
+no matter when it was admitted or how long its prompt was.  The decode hot
+path replays pre-compiled bucketed steps (``DecodeRunner``) and prompts are
+padded to a power-of-two ladder before the jitted prefill, so steady-state
+serving performs zero retraces (watch ``runner_compile_total`` /
+``prefill_compile_total``).
 """
 from __future__ import annotations
 
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -23,13 +28,17 @@ from jax.sharding import Mesh
 from ..configs.base import ModelConfig
 from ..core.unified import SharedArena
 from ..models.transformer import Transformer
+from ..obs.metrics import get_registry
 from ..obs.trace import get_tracer
 from ..runtime.serve_lib import (Request, build_decode_step,
                                  build_prefill_step)
 from . import pages as pages_lib
 from .metrics import ServeMetrics
 from .pages import PagePoolExhausted, PagedKVCache
+from .runner import DecodeRunner
 from .scheduler import GenRequest, RequestState, ScheduledRequest, Scheduler
+
+PREFILL_BUCKET_MIN = 8          # floor of the power-of-two prompt ladder
 
 
 class ServeEngine:
@@ -43,7 +52,9 @@ class ServeEngine:
                  accounting_cfg: Optional[ModelConfig] = None,
                  mesh: Optional[Mesh] = None,
                  shared: Optional[SharedArena] = None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 use_runner: bool = True,
+                 replan_interval: Optional[int] = 64):
         """``accounting_cfg`` lets the page pool account at full-size arch
         scale while a reduced model executes (the launch-driver pattern).
 
@@ -51,7 +62,14 @@ class ServeEngine:
         serving tenant of a ``SharedArena`` — admission is gated against the
         tenant's share of the joint budget (register any training tenant on
         the arena *before* constructing the engine, so the first joint plan
-        sees both workloads)."""
+        sees both workloads).
+
+        ``use_runner=False`` falls back to the legacy full-max_batch decode
+        jit (the "slab" execution baseline the benches compare against).
+
+        ``replan_interval``: close a §4.3 epoch every this many steps even
+        under sustained load (None = only when fully idle, the old behavior
+        that starved decode-outrun replans on busy engines)."""
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -76,12 +94,54 @@ class ServeEngine:
         self.sched = Scheduler(self.kv, max_batch=max_batch, policy=policy,
                                max_concurrency=cap, prefill_chunk=prefill_chunk)
         self.metrics = metrics if metrics is not None else ServeMetrics()
-        self.prefill = build_prefill_step(model, mesh)
-        self.decode = build_decode_step(model, mesh, donate=False)
+        self.prefill = build_prefill_step(model, mesh,
+                                          trace_hook=self._on_prefill_trace)
+        self.decode = build_decode_step(model, mesh, donate=False,
+                                        trace_hook=self._on_decode_trace)
+        self.runner = DecodeRunner(model, max_batch=max_batch,
+                                   mesh=mesh) if use_runner else None
+        self.replan_interval = replan_interval
+        kinds = set(model.cfg.block_pattern) | set(model.cfg.tail_pattern)
+        # prompt padding is exact only when every cache is positional
+        # attention (recurrent/rolling state integrates pad tokens; MoE
+        # capacity counts them into expert load)
+        self._pad_prefill = (kinds <= {"attn"}
+                             and not model.cfg.is_encoder_decoder
+                             and not model.cfg.n_experts)
+        self.prefill_compiles = 0
+        self.decode_compiles = 0
+        self.decode_steps = 0
+        self.decode_time_s = 0.0
         self.cache = model.init_cache(max_batch, max_len)
         self.tokens = jnp.zeros((max_batch,), jnp.int32)
         self.step_count = 0
         self.completed: dict[int, list[int]] = {}
+
+    # -- compile accounting (trace-time hooks: fire once per signature) -----------
+    def _on_prefill_trace(self, batch) -> None:
+        self.prefill_compiles += 1
+        reg = get_registry()
+        if reg is not None:
+            reg.counter("prefill_compile_total",
+                        "jitted prefill (re)traces").inc()
+        t = get_tracer()
+        if t is not None:
+            t.instant("compile", "serving", track="prefill",
+                      seq=int(batch["tokens"].shape[1]),
+                      total=self.prefill_compiles)
+
+    def _on_decode_trace(self, tokens) -> None:
+        self.decode_compiles += 1
+        t = get_tracer()
+        if t is not None:
+            t.instant("compile", "serving", track="decode",
+                      batch=int(tokens.shape[0]), total=self.decode_compiles)
+
+    def warmup(self) -> None:
+        """Pre-compile every runner bucket so the serving loop never traces
+        a decode step (the zero-retrace invariant holds from step 0)."""
+        if self.runner is not None:
+            self.runner.warmup(self.params, self.cache, self.tokens)
 
     # -- queue --------------------------------------------------------------------
     def enqueue(self, req: GenRequest) -> None:
@@ -120,6 +180,13 @@ class ServeEngine:
         if self.sched.idle:
             self.kv.reset_epoch()       # epoch boundary: §4.3 replan if dirty
             self._refresh_cap()
+        elif (self.replan_interval
+              and self.step_count % self.replan_interval == 0):
+            # sustained load never goes idle — close the epoch on a clock so
+            # decode-outrun replans still fire (pool resize respects live
+            # pages, so this is safe mid-flight)
+            self.kv.reset_epoch()
+            self._refresh_cap()
 
     def _refresh_cap(self) -> None:
         """Unified mode: a boundary replan may have rebalanced the split, so
@@ -132,14 +199,37 @@ class ServeEngine:
                                         hi=self.max_batch)
         self.sched.cap = max(1, min(self.max_batch, cap))
 
+    def _prefill_batch(self, prompt) -> dict:
+        """Pad the prompt to a power-of-two ladder so the jitted prefill sees
+        O(log max_len) shapes instead of one trace per prompt length.  The
+        padded tail is exact: logits are read at ``true_len - 1`` and decode
+        masks cache positions >= ``true_len`` until they are overwritten."""
+        s = int(prompt.shape[0])
+        if not self._pad_prefill:
+            return {"tokens": prompt[None, :]}
+        padded = PREFILL_BUCKET_MIN
+        while padded < s:
+            padded *= 2
+        padded = min(padded, self.max_len) if self.max_len >= s else s
+        if padded == s:
+            return {"tokens": prompt[None, :],
+                    "true_len": jnp.asarray(s, jnp.int32)}
+        return {"tokens": jnp.pad(prompt, (0, padded - s))[None, :],
+                "true_len": jnp.asarray(s, jnp.int32)}
+
     def _model_prefill(self, sr: ScheduledRequest) -> None:
         self.metrics.n_prefill_tokens += sr.prompt_len
         t = get_tracer()
         if t is not None:
             t.instant("prefill", "serving", track="engine", rid=sr.rid,
                       prompt_len=sr.prompt_len, slot=sr.slot)
-        logits, cache1 = self.prefill(self.params, {"tokens": sr.req.prompt[None, :]})
+        logits, cache1 = self.prefill(self.params,
+                                      self._prefill_batch(sr.req.prompt))
         self.cache = _merge_slot(self.cache, cache1, sr.slot, self.max_len)
+        # settle the merge here so its cost is attributed to prefill — the
+        # async writes would otherwise be absorbed into the next decode
+        # step's sync and pollute the measured decode step time
+        jax.block_until_ready(self.cache)
         tok = jnp.argmax(logits[0]).astype(jnp.int32)
         self.tokens = self.tokens.at[sr.slot].set(tok)
         if not self._grow(sr):          # prefill already yields one token
@@ -158,15 +248,31 @@ class ServeEngine:
         if t is not None:
             t.instant("decode", "serving", track="engine",
                       n_running=len(running))
-        logits, self.cache = self.decode(self.params, self.cache, self.tokens)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.tokens = nxt
+        t0 = time.perf_counter()
+        if self.runner is not None:
+            slots = [sr.slot for sr in running]
+            # greedy pick + token-buffer update happen inside the compiled
+            # step, so this branch is pure executable replay; nxt arrives as
+            # host ints (step_greedy blocks on the transfer)
+            nxt, self.tokens, self.cache = self.runner.step_greedy(
+                self.params, self.cache, self.tokens, slots)
+            by_slot = {slot: i for i, slot in enumerate(slots)}
+        else:
+            logits, self.cache = self.decode(self.params, self.cache,
+                                             self.tokens)
+            nxt = jnp.argmax(jax.block_until_ready(logits),
+                             axis=-1).astype(jnp.int32)
+            self.tokens = nxt
+            by_slot = None
+        self.decode_time_s += time.perf_counter() - t0
+        self.decode_steps += 1
         for sr in running:
             if sr.state is not RequestState.RUNNING:
                 continue                # preempted by an earlier grow this step
             if not self._grow(sr):
                 continue                # sr itself was the preemption victim
-            sr.out.append(int(nxt[sr.slot]))
+            tok = nxt[by_slot[sr.slot]] if by_slot is not None else nxt[sr.slot]
+            sr.out.append(int(tok))
             self.metrics.on_token(sr.rid)
             if sr.remaining <= 0:
                 self._finish(sr)
@@ -223,15 +329,17 @@ def _merge_slot(batched_cache, single_cache, slot: int, max_len: int):
     """Copy one request's prefill cache into slot ``slot`` of the batch cache.
 
     Pattern-group leaves are (G, B, ...) — batch axis 1; tail leaves are
-    (B, ...) — batch axis 0; "pos" is a scalar (engine keeps the max)."""
+    (B, ...) — batch axis 0; "pos" is the (B,) per-slot position vector, so
+    only the admitted row's clock moves (the old scalar-clock ``jnp.maximum``
+    merge skewed every other in-flight request's attention offsets)."""
     b_paths = jax.tree_util.tree_flatten_with_path(batched_cache)
     s_leaves = jax.tree_util.tree_flatten(single_cache)[0]
     treedef = jax.tree_util.tree_structure(batched_cache)
     out = []
     for (kp, b), s in zip(b_paths[0], s_leaves):
         path = tuple(str(getattr(k, "key", "")) for k in kp)
-        if b.ndim == 0:                     # pos
-            out.append(jnp.maximum(b, s))
+        if path[-1] == "pos":               # (B,) <- (1,): one row's clock
+            out.append(b.at[slot].set(s[0]))
             continue
         axis = 1 if "pattern" in path else 0
         pads = [(0, 0)] * b.ndim
