@@ -9,11 +9,15 @@ Three levels:
   * engine level — a real (tiny) model driven through the new
     continuous-batching engine vs the old slot count: tokens/s, peak bytes,
     and max sustained concurrency.
-  * measured level — the same live trace *executed* two ways: the paged
-    pool + bucketed pre-compiled ``DecodeRunner`` vs the legacy full-batch
-    ("slab") decode jit.  Gates on measured tokens/s and decode step time,
-    not planned bytes, and asserts the steady-state zero-retrace invariant
-    (``runner_compiles_steady_delta == 0``).
+  * measured level — the same live trace *executed* four ways: the Pallas
+    paged-attention kernel (page table consumed in-kernel), its pure-jnp
+    gather oracle, the runner over the contiguous cache (gather +
+    contiguous flash), and the legacy full-batch ("slab") decode jit.
+    Gates on measured tokens/s and decode step time, not planned bytes,
+    asserts four-way token parity, and asserts the steady-state
+    zero-retrace invariant (``runner_compiles_steady_delta == 0``) for the
+    gather and paged paths alike.  A paged-attention microbench row times
+    the kernel against the oracle outside the engine.
 
 Emits ``BENCH_serving.json`` (machine-readable) next to the CSV lines to
 seed the perf trajectory, plus ``TRACE_runner.json`` (Perfetto) for the
@@ -155,21 +159,29 @@ def engine_row(quick: bool = False):
 
 
 def measured_rows(quick: bool = False):
-    """Execute (not just account) one live trace two ways and report what the
-    clock saw: paged pool + bucketed pre-compiled ``DecodeRunner`` vs the
-    legacy full-``max_batch`` "slab" decode jit.
+    """Execute (not just account) one live trace four ways and report what
+    the clock saw:
 
-    Both modes are exact (per-slot position vector), so the completed token
-    streams must match — asserted here, making the speedup an
-    apples-to-apples measurement.  The runner run is traced to
-    ``TRACE_runner.json`` so its per-bucket compile events are inspectable;
-    its compile counters are snapshotted after warmup and after the run, and
-    the steady-state delta (the zero-retrace invariant) is part of the
-    record."""
+      * ``paged_kernel`` — runner + Pallas paged-attention: the page table
+        is consumed inside the decode executable, no KV gather/copy;
+      * ``paged_ref``    — same paged cache, the pure-jnp gather oracle as
+        the in-engine attention (differential baseline for the kernel);
+      * ``paged_runner`` — runner over the contiguous cache (gather +
+        contiguous flash — the execution the paged kernel replaces);
+      * ``slab``         — legacy full-``max_batch`` decode jit.
+
+    Every mode is exact (per-slot position vector / per-row page-table
+    masking), so all four completed token streams must match — asserted
+    here, making the speedups apples-to-apples.  The runner runs snapshot
+    their compile counters after warmup, and the steady-state delta (the
+    zero-retrace invariant) is part of the record for the gather AND paged
+    paths.  On CPU the Pallas kernel runs in interpret mode (correctness
+    and retrace accounting are the gate there; the fetch-only-owned-pages
+    win is a TPU property)."""
     import jax
 
     from repro.launch.train import reduced_config
-    from repro.models import Transformer
+    from repro.models import RunOpts, Transformer
     from repro.obs import ChromeTraceBuilder, Tracer, use_tracer
     from repro.obs.metrics import MetricsRegistry, use_registry
     from repro.serving import GenRequest, ServeEngine
@@ -177,6 +189,7 @@ def measured_rows(quick: bool = False):
     n_req = 8 if quick else 16
     cfg, _, _ = reduced_config("qwen2-0.5b", "tiny")
     model = Transformer(cfg)
+    model_ref = Transformer(cfg, RunOpts(paged_attn_impl="ref"))
     params = model.init(jax.random.PRNGKey(0))
     # varied prompt lengths exercise the prefill ladder; spaced arrivals hold
     # concurrency at 2-4 of the 8 slots, the regime where the slab pays for
@@ -192,15 +205,22 @@ def measured_rows(quick: bool = False):
                            gen_len=r.gen_len, arrival=r.arrival)
                 for r in trace]
 
+    modes = (
+        ("paged_kernel", model, True, "paged"),
+        ("paged_ref", model_ref, True, "paged"),
+        ("paged_runner", model, True, "gather"),
+        ("slab", model, False, "gather"),
+    )
     rows, completed = {}, {}
-    for label, use_runner in (("paged_runner", True), ("slab", False)):
-        eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
-                          max_batch=8, page_tokens=8, use_runner=use_runner)
+    for label, m, use_runner, attn_mode in modes:
+        eng = ServeEngine(m, params, sample_trace=trace, max_len=64,
+                          max_batch=8, page_tokens=8, use_runner=use_runner,
+                          attn_mode=attn_mode)
         reg = MetricsRegistry()
         tracer = Tracer()
         with use_registry(reg), use_tracer(tracer):
             if use_runner:
-                eng.warmup()                    # AOT: one compile per bucket
+                eng.warmup()        # AOT: buckets + the prompt ladder
                 warm = eng.runner.n_compiles
             else:
                 # prime the slab jit (and its eager argmax) so both timed
@@ -227,31 +247,87 @@ def measured_rows(quick: bool = False):
             row["runner_compiles_warmup"] = warm
             row["runner_compiles_total"] = eng.runner.n_compiles
             row["runner_compiles_steady_delta"] = eng.runner.n_compiles - warm
-            tb = ChromeTraceBuilder()
-            tb.add_events(tracer.events())
-            tb.add_plan("kv-pool", eng.kv.plan.profile)
-            tb.write(TRACE_RUNNER_JSON)
+            if label == "paged_runner":
+                tb = ChromeTraceBuilder()
+                tb.add_events(tracer.events())
+                tb.add_plan("kv-pool", eng.kv.plan.profile)
+                tb.write(TRACE_RUNNER_JSON)
         rows[label] = row
         completed[label] = eng.completed
     # exactness contract: execution strategy must not change the tokens
-    assert completed["paged_runner"] == completed["slab"], \
-        "runner vs slab token streams diverged"
+    for label in ("paged_kernel", "paged_ref", "slab"):
+        assert completed[label] == completed["paged_runner"], \
+            f"{label} vs paged_runner token streams diverged"
+
+    def _speedup(a, b):             # step time of b over a
+        return (rows[b]["decode_step_ms"] / rows[a]["decode_step_ms"]
+                if rows[a]["decode_step_ms"] else 0.0)
+
     rec = {
         **rows,
         "parity_exact": True,
-        "speedup_runner_vs_slab": (rows["slab"]["decode_step_ms"]
-                                   / rows["paged_runner"]["decode_step_ms"]
-                                   if rows["paged_runner"]["decode_step_ms"]
-                                   else 0.0),
+        "speedup_runner_vs_slab": _speedup("paged_runner", "slab"),
+        "speedup_kernel_vs_gather": _speedup("paged_kernel", "paged_runner"),
+        "speedup_kernel_vs_ref": _speedup("paged_kernel", "paged_ref"),
     }
     r = rows["paged_runner"]
+    k = rows["paged_kernel"]
     derived = (f"tok_per_s={r['tokens_per_s_measured']:.1f};"
                f"step_ms={r['decode_step_ms']:.2f};"
                f"slab_step_ms={rows['slab']['decode_step_ms']:.2f};"
+               f"kernel_step_ms={k['decode_step_ms']:.2f};"
                f"speedup={rec['speedup_runner_vs_slab']:.2f}x;"
+               f"kernel_vs_gather={rec['speedup_kernel_vs_gather']:.2f}x;"
                f"compiles={r['runner_compiles_total']};"
-               f"steady_delta={r['runner_compiles_steady_delta']}")
+               f"steady_delta={r['runner_compiles_steady_delta']};"
+               f"paged_steady_delta={k['runner_compiles_steady_delta']}")
     return (f"measured/qwen2-0.5b-tiny/n{n_req}", 0.0, derived), rec
+
+
+def kernel_row(quick: bool = False):
+    """Paged-attention microbench: the kernel vs the gather oracle on one
+    decode-shaped problem, outside the engine (pure attention op latency).
+    On CPU the kernel runs interpreted — the row tracks correctness drift
+    (max abs err vs the oracle) alongside the timings."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import ref_paged_attention
+
+    b, kv, g, hd, pt, maxp = 8, 2, 2, 64, 8, 8
+    rng = np.random.default_rng(0)
+    n_pool = b * maxp
+    q = jnp.asarray(rng.standard_normal((b, kv, g, hd)), jnp.float32)
+    k_pages = jnp.asarray(rng.standard_normal((n_pool, pt, kv, hd)),
+                          jnp.float32)
+    v_pages = jnp.asarray(rng.standard_normal((n_pool, pt, kv, hd)),
+                          jnp.float32)
+    tables = jnp.asarray(rng.permutation(n_pool).reshape(b, maxp), jnp.int32)
+    positions = jnp.asarray(rng.integers(0, maxp * pt, size=b), jnp.int32)
+    reps = 3 if quick else 10
+
+    def bench(fn):
+        out = jax.block_until_ready(fn(q, k_pages, v_pages, tables,
+                                       positions))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = jax.block_until_ready(fn(q, k_pages, v_pages, tables,
+                                           positions))
+        return out, 1e6 * (time.perf_counter() - t0) / reps
+
+    kout, kus = bench(jax.jit(kops.paged_attention))
+    rout, rus = bench(jax.jit(ref_paged_attention))
+    err = float(jnp.abs(kout - rout).max())
+    assert err < 2e-5, f"kernel diverged from oracle: {err}"
+    rec = {"shape": {"batch": b, "kv_heads": kv, "group": g, "head_dim": hd,
+                     "page_tokens": pt, "pages_per_req": maxp},
+           "kernel_us": kus, "ref_us": rus, "max_abs_err": err,
+           "interpret": kops._interpret_default()}
+    derived = (f"kernel_us={kus:.1f};ref_us={rus:.1f};"
+               f"err={err:.2e};interpret={rec['interpret']}")
+    return (f"kernel/paged_attention/b{b}", kus, derived), rec
 
 
 def main(quick: bool = False):
@@ -263,9 +339,11 @@ def main(quick: bool = False):
     print(f"serve/{erow[0]},{erow[1]:.3f},{erow[2]}")
     mrow, mrec = measured_rows(quick)
     print(f"serve/{mrow[0]},{mrow[1]:.3f},{mrow[2]}")
+    krow, krec = kernel_row(quick)
+    print(f"serve/{krow[0]},{krow[1]:.3f},{krow[2]}")
     with open(OUT_JSON, "w") as f:
         json.dump({"planner": records, "engine": erec,
-                   "measured": mrec,
+                   "measured": mrec, "kernel": krec,
                    "drift": erec["drift"],
                    "replan_causes": erec["replan_causes"]}, f, indent=2)
     print(f"# wrote {OUT_JSON}, {TRACE_JSON} and {TRACE_RUNNER_JSON}")

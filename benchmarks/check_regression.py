@@ -54,6 +54,23 @@ KEY_METRICS = [
      "higher_is_worse", 0.0),
     ("BENCH_serving.json", "measured.speedup_runner_vs_slab",
      "lower_is_worse", 0.5),
+    # paged-kernel execution: token counts exact in both paged modes, the
+    # paged runner must hold the zero-retrace invariant too, and the
+    # kernel-vs-gather ratio is same-run (very wide tol: on CPU the kernel
+    # is interpreted, so only collapses — not jitter — should warn)
+    ("BENCH_serving.json", "measured.paged_kernel.tokens",
+     "lower_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.paged_kernel.n_completed",
+     "lower_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.paged_kernel.runner_compiles_steady_delta",
+     "higher_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.paged_kernel.prefill_compiles",
+     "higher_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.paged_ref.tokens",
+     "lower_is_worse", 0.0),
+    ("BENCH_serving.json", "measured.speedup_kernel_vs_gather",
+     "lower_is_worse", 0.75),
+    ("BENCH_serving.json", "kernel.max_abs_err", "higher_is_worse", 10.0),
     ("BENCH_remat.json", "configs.0.planned_vs_none", "higher_is_worse", 0.05),
     ("BENCH_remat.json", "configs.0.eviction.n_evicted", "higher_is_worse", 0.25),
     ("BENCH_remat.json", "max_feasible_batch.max_batch_remat",
@@ -84,6 +101,15 @@ KEY_METRICS = [
      "higher_is_worse", 0.0),
     ("BENCH_scenarios.json",
      "cells.qwen2-burst-tight.measured.runner_compiles_steady_delta",
+     "higher_is_worse", 0.0),
+    # the paged-kernel cell: same SLO/completion floor and zero-retrace bar
+    # as its gather twin
+    ("BENCH_scenarios.json", "cells.qwen2-poisson-paged.slo.attainment",
+     "lower_is_worse", 0.0),
+    ("BENCH_scenarios.json", "cells.qwen2-poisson-paged.n_completed",
+     "lower_is_worse", 0.0),
+    ("BENCH_scenarios.json",
+     "cells.qwen2-poisson-paged.measured.runner_compiles_steady_delta",
      "higher_is_worse", 0.0),
 ]
 

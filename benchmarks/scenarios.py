@@ -59,6 +59,7 @@ class Scenario:
     prefill_chunk: int = 16
     gen_jitter: int = 4
     use_runner: bool = True             # bucketed pre-compiled decode ladder
+    attn_mode: str = "gather"           # gather | paged (Pallas page-table)
     seed: int = 0
     # SLO ceilings on the step clock (per class when use_classes); chosen
     # to sit mid-range against the quick-mode distributions so attainment
@@ -74,6 +75,7 @@ def default_matrix() -> list[Scenario]:
     }
     return [
         Scenario(name="qwen2-poisson"),
+        Scenario(name="qwen2-poisson-paged", attn_mode="paged"),
         Scenario(name="qwen2-diurnal", arrival="diurnal",
                  mean_interarrival=1.5),
         Scenario(name="mamba2-poisson", arch="mamba2-130m"),
@@ -166,7 +168,8 @@ def run_cell(sc: Scenario, quick: bool, trace_dir: str = ".") -> dict:
         eng = ServeEngine(model, params, sample_trace=sample, max_len=64,
                           max_batch=sc.max_batch, page_tokens=sc.page_tokens,
                           policy=sc.policy, prefill_chunk=sc.prefill_chunk,
-                          shared=shared, use_runner=sc.use_runner)
+                          shared=shared, use_runner=sc.use_runner,
+                          attn_mode=sc.attn_mode)
         eng.warmup()                    # AOT-compile the decode ladder
         warm_compiles = eng.runner.n_compiles if eng.runner else 0
         summary = eng.run(live, max_steps=20_000)
@@ -226,6 +229,7 @@ def run_cell(sc: Scenario, quick: bool, trace_dir: str = ".") -> dict:
         # this cell actually decoded, plus the zero-retrace invariant
         "measured": {
             "use_runner": sc.use_runner,
+            "attn_mode": sc.attn_mode,
             "tokens": summary["tokens"],
             "tokens_per_s": summary["tokens_per_s"],
             "decode_steps": eng.decode_steps,

@@ -1,6 +1,9 @@
-"""Pallas TPU kernels for the compute hot spots: flash attention, Mamba2 SSD
-chunk scan, RG-LRU blocked scan.  ``ops`` holds the jit'd wrappers; ``ref``
-the pure-jnp oracles; validation sweeps live in tests/test_kernels_*.py."""
+"""Pallas TPU kernels for the compute hot spots: flash attention, paged
+decode attention (page tables consumed in-kernel via scalar prefetch), Mamba2
+SSD chunk scan, RG-LRU blocked scan.  ``ops`` holds the jit'd wrappers;
+``ref`` the pure-jnp oracles; validation sweeps live in
+tests/test_kernels.py and tests/test_paged_attention.py (differential
+oracle, interpret mode)."""
 from . import ops, ref
 
 __all__ = ["ops", "ref"]

@@ -1,11 +1,14 @@
 """Jit'd wrappers exposing the Pallas kernels in model-native layouts.
 
 On CPU (this container) the kernels execute in interpret mode; on TPU they
-compile natively.  Block shapes are validated against the VMEM budget with
-the paper's planner before launch.
+compile natively.  ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode on any
+backend — the CI kernel-oracle job sets it so the differential suites run
+without an accelerator.  Block shapes are validated against the VMEM budget
+with the paper's planner before launch.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -13,6 +16,7 @@ import jax.numpy as jnp
 
 from ..core.planner import MemoryPlanner
 from . import flash_attention as _fa
+from . import paged_attention as _pa
 from . import rglru_scan as _rg
 from . import ssd_scan as _ssd
 
@@ -21,10 +25,18 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def _interpret_default() -> bool:
+    """Env override first (CI forces interpret mode), else interpret on CPU."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("", "0", "false", "no")
+    return _on_cpu()
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
                     block_q=128, block_k=128, interpret=None):
     """Model layout q: (B,S,KV,G,hd); k/v: (B,S,KV,hd) -> ctx (B,S,KV,G,hd)."""
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = _interpret_default() if interpret is None else interpret
     b, s, kv, g, hd = q.shape
     check = MemoryPlanner.check_vmem(_fa.vmem_blocks(block_q, block_k, hd,
                                                      q.dtype))
@@ -38,11 +50,24 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
     return out.transpose(0, 2, 1, 3).reshape(b, s, kv, g, hd)
 
 
+def paged_attention(q, k_pages, v_pages, tables, positions, *, interpret=None):
+    """Decode layout q: (B,KV,G,hd); pools (P,pt,KV,hd); tables (B,maxp);
+    positions (B,) -> ctx (B,KV,G,hd).  The page table is consumed inside the
+    kernel (scalar-prefetch index_maps) — no gather, no contiguous copy."""
+    interpret = _interpret_default() if interpret is None else interpret
+    _, kv, g, hd = q.shape
+    pt = k_pages.shape[1]
+    check = MemoryPlanner.check_vmem(_pa.vmem_blocks(g, pt, hd, q.dtype))
+    assert check["fits"], f"paged blocks exceed VMEM: {check}"
+    return _pa.paged_attention_decode(q, k_pages, v_pages, tables, positions,
+                                      interpret=interpret)
+
+
 def ssd_scan(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk=128,
              interpret=None):
     """Mirror of models.ssm.ssd_chunked: x (B,S,H,P), dt (B,S,H) softplus'd,
     a_log (H,), b/c (B,S,G,N), d_skip (H,).  Returns (y f32, h_fin f32)."""
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = _interpret_default() if interpret is None else interpret
     a = -jnp.exp(a_log.astype(jnp.float32))
     dta = dt.astype(jnp.float32) * a
     xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
@@ -54,5 +79,5 @@ def ssd_scan(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk=128,
 
 def rglru_scan(a, b, h0=None, *, block=256, interpret=None):
     """Linear recurrence y_t = a_t y_{t-1} + b_t over axis 1.  (B,S,L) f32."""
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = _interpret_default() if interpret is None else interpret
     return _rg.rglru_scan_kernel(a, b, h0, block=block, interpret=interpret)

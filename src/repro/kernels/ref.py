@@ -27,6 +27,25 @@ def ref_attention_bhsd(q, k, v, *, causal=True, window=0, q_offset=0):
     return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
 
 
+def ref_paged_attention(q, k_pages, v_pages, tables, positions):
+    """Gather-then-softmax oracle for the paged decode kernel.
+
+    q: (B,KV,G,hd); k/v pools: (P,pt,KV,hd); tables: (B,maxp) int32;
+    positions: (B,) — row b attends to token indices <= positions[b].
+    Token t of row b lives at (tables[b, t // pt], t % pt)."""
+    b, kv, g, hd = q.shape
+    pt = k_pages.shape[1]
+    maxp = tables.shape[1]
+    k = k_pages[tables].reshape(b, maxp * pt, kv, hd).astype(jnp.float32)
+    v = v_pages[tables].reshape(b, maxp * pt, kv, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32), k) / jnp.sqrt(hd)
+    idx = jnp.arange(maxp * pt)
+    valid = idx[None, :] <= positions[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v).astype(q.dtype)
+
+
 def ref_ssd(x, dta, b_mat, c_mat, h0=None):
     """Sequential SSD recurrence.  x: (B,S,H,P) dt-scaled; dta: (B,S,H)
     log-decays; b/c: (B,S,G,N).  Returns (y (B,S,H,P) f32, h (B,H,P,N) f32)."""

@@ -114,6 +114,13 @@ def main() -> None:
                     default=True,
                     help="decode via the pre-compiled bucketed DecodeRunner "
                          "(--no-runner: legacy full-batch decode jit)")
+    ap.add_argument("--attn", choices=["gather", "paged"], default="gather",
+                    help="decode KV layout: 'gather' copies each slot's "
+                         "contiguous cache rows through the runner; 'paged' "
+                         "runs the Pallas paged-attention kernel straight "
+                         "off the page pool (requires --runner; on CPU set "
+                         "REPRO_PALLAS_INTERPRET=1 or rely on the automatic "
+                         "interpret-mode fallback)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default="", metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run "
@@ -165,7 +172,7 @@ def main() -> None:
                       max_batch=args.max_batch, page_tokens=args.page_tokens,
                       policy=args.policy, prefill_chunk=args.prefill_chunk,
                       accounting_cfg=full_cfg, shared=shared,
-                      use_runner=args.runner)
+                      use_runner=args.runner, attn_mode=args.attn)
     if args.runner:
         t0 = time.perf_counter()
         eng.warmup()

@@ -7,6 +7,10 @@ Implementations (selected via ``impl``):
                 Pallas kernel in repro.kernels.flash_attention).
   * "pallas"  — TPU Pallas kernel (repro.kernels.ops.flash_attention).
 
+Decode-time attention has two cache layouts: ``attend_decode`` over the
+contiguous per-slot batch cache, and ``attend_paged_decode`` straight off the
+paged pool (per-request page tables consumed inside the Pallas kernel).
+
 GQA is computed with separate (kv_heads, group) axes — no materialized
 repeat_kv — so the kv_heads axis can be model-sharded.
 """
@@ -190,3 +194,27 @@ def attend_decode(q, k_cache, v_cache, cache_pos, *, window=0, rolling=False):
     s = s + jnp.where(valid[:, None, None, None, :], 0.0, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     return jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
+
+
+def attend_paged_decode(q, k_pages, v_pages, tables, cache_pos, *,
+                        impl="pallas"):
+    """Decode attention straight off the paged pool — no gather, no copy.
+
+    q: (B,1,kv,g,hd); k/v pools: (P,pt,kv,hd) shared by the whole batch;
+    tables: (B,maxp) int32 page-index rows (token t of row b lives at
+    (tables[b, t//pt], t%pt)); cache_pos: (B,) per-slot positions — row b
+    attends to token indices <= cache_pos[b].
+
+    ``impl="pallas"`` runs the Pallas kernel (the page table drives the
+    BlockSpec index_maps via scalar prefetch); ``impl="ref"`` runs the
+    pure-jnp gather oracle — the differential baseline the kernel is gated
+    against."""
+    qh = q[:, 0]                                        # (B,kv,g,hd)
+    pos = jnp.asarray(cache_pos, jnp.int32).reshape(-1)
+    if impl == "ref":
+        from ..kernels.ref import ref_paged_attention
+        ctx = ref_paged_attention(qh, k_pages, v_pages, tables, pos)
+    else:
+        from ..kernels import ops as kops
+        ctx = kops.paged_attention(qh, k_pages, v_pages, tables, pos)
+    return ctx[:, None]                                 # (B,1,kv,g,hd)

@@ -40,6 +40,7 @@ class RunOpts:
     loss_chunk: int = 512
     use_kernels: bool = False         # Pallas paths for ssd / rglru
     ssd_chunk: int = 256
+    paged_attn_impl: str = "pallas"   # pallas | ref (paged decode cache)
     # ---- §Perf hillclimb knobs (beyond-paper optimizations) ---------------
     softmax_dtype: str = "float32"    # float32 | bfloat16 (score storage)
     cp_attention: bool = False        # context-parallel attention over model
@@ -486,6 +487,43 @@ class Transformer:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_spec(batch, max_len))
 
+    # ---- paged decode cache ----------------------------------------------------
+    def supports_paged(self) -> bool:
+        """Paged decode stores KV only — every block must be plain global
+        attention (no rolling windows, recurrent state, or cross-attention)."""
+        cfg = self.cfg
+        return (set(cfg.block_pattern) <= {"attn"} and not cfg.tail_pattern
+                and not cfg.is_encoder_decoder)
+
+    def paged_cache_spec(self, batch: int, *, n_pages: int, page_tokens: int,
+                         pages_per_req: int):
+        """Abstract paged cache: per-layer k/v *pools* shared by the whole
+        batch plus one page-table row and position per slot.  Pool leaves
+        carry no batch axis — the DecodeRunner passes them through its
+        gather/scatter wholesale, which is exactly how the in-executable KV
+        copy is dropped."""
+        cfg, dt = self.cfg, self.compute_dtype
+        assert self.supports_paged(), \
+            f"paged cache unsupported for pattern {cfg.block_pattern}"
+        g = cfg.n_pattern_groups
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        pool = jax.ShapeDtypeStruct((g, n_pages, page_tokens, kv, hd), dt)
+        return {
+            "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+            "block_tables": jax.ShapeDtypeStruct((batch, pages_per_req),
+                                                 jnp.int32),
+            "pattern": {str(i): {"k_pages": pool, "v_pages": pool}
+                        for i in range(len(cfg.block_pattern))},
+        }
+
+    def init_paged_cache(self, batch: int, *, n_pages: int, page_tokens: int,
+                         pages_per_req: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.paged_cache_spec(batch, n_pages=n_pages,
+                                  page_tokens=page_tokens,
+                                  pages_per_req=pages_per_req))
+
     # ---- per-block decode ------------------------------------------------------
     def _apply_block_decode(self, kind, x, p, cache, pos, rope_cs):
         """x: (B,1,D); cache: this block's entries; pos: (B,) int32 — every
@@ -538,13 +576,50 @@ class Transformer:
             return x + y[:, None, :], st
         raise ValueError(kind)
 
+    def _apply_block_decode_paged(self, x, p, cache, pos, tables, rope_cs):
+        """One attn block against the paged pool.  cache: {"k_pages",
+        "v_pages"} (P,pt,kv,hd); tables: (B,maxp) page-index rows; pos: (B,).
+        The new token's KV is scattered to (tables[b, pos//pt], pos%pt) and
+        attention reads the pool through the table — no gathered copy of the
+        request's KV ever materializes."""
+        cfg, dt = self.cfg, self.compute_dtype
+        h = apply_norm(x, p["attn"]["norm"], cfg.norm)
+        q, k, v = attn.qkv_project(h, p["attn"], cfg, dt)
+        if rope_cs is not None:
+            q = attn.apply_rope(q, *rope_cs)
+            k = attn.apply_rope(k, *rope_cs)
+        k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+        pt = k_pages.shape[1]
+        page = jnp.take_along_axis(tables, (pos // pt)[:, None], axis=1)[:, 0]
+        off = pos % pt
+        # duplicate (page, off) pairs from runner slot-padding write
+        # identical values, so the scatter is order-independent
+        k_pages = k_pages.at[page, off].set(k[:, 0])
+        v_pages = v_pages.at[page, off].set(v[:, 0])
+        ctx = attn.attend_paged_decode(q, k_pages, v_pages, tables, pos,
+                                       impl=self.opts.paged_attn_impl)
+        x = x + attn.out_project(ctx, p["attn"], cfg, dt)
+        h = apply_norm(x, p["mlp_norm"], cfg.norm)
+        if cfg.n_experts:
+            y, _ = moe_lib.moe_mlp(h, p["mlp"], cfg, dt,
+                                   grouped=self.opts.moe_grouped)
+            x = x + y
+        else:
+            from .layers import mlp as dense_mlp
+            x = x + dense_mlp(h, p["mlp"], cfg.act, dt)
+        return x, {"k_pages": k_pages, "v_pages": v_pages}
+
     # ---- public: decode (one token for every sequence in the batch) --------------
     def decode_step(self, params, cache, tokens):
         """tokens: (B,) int32 -> (logits (B, V), new cache).
 
         ``cache["pos"]`` is a (B,) per-slot position vector: each row attends
         at its own offset, so a batch mixing requests admitted at different
-        times (unequal prompt lengths) decodes exactly."""
+        times (unequal prompt lengths) decodes exactly.  A cache carrying
+        ``block_tables`` selects the paged path: KV lives in per-layer page
+        pools and attention consumes the page table in-kernel."""
+        if "block_tables" in cache:
+            return self._decode_step_paged(params, cache, tokens)
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed_in(params, tokens[:, None])
@@ -571,6 +646,33 @@ class Transformer:
                                                  cache["tail"][str(i)], pos, rope_cs)
                 tail[str(i)] = nc
             new_cache["tail"] = tail
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        logits = self.logits(params, x)[:, 0, :]
+        return logits, new_cache
+
+    def _decode_step_paged(self, params, cache, tokens):
+        """Paged decode step: same contract as ``decode_step`` over the
+        ``paged_cache_spec`` layout.  ``block_tables`` rides along unchanged
+        (the engine maintains it host-side as pages are granted)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        tables = cache["block_tables"]
+        x = self._embed_in(params, tokens[:, None])
+        rope_cs = self._rope(pos[:, None])
+
+        def body(x, xs):
+            gp, gc = xs
+            outs = {}
+            for i in range(len(cfg.block_pattern)):
+                x, nc = self._apply_block_decode_paged(
+                    x, gp[str(i)], gc[str(i)], pos, tables, rope_cs)
+                outs[str(i)] = nc
+            return x, outs
+
+        x, pat_cache = jax.lax.scan(body, x,
+                                    (params["pattern"], cache["pattern"]))
+        new_cache = {"pos": pos + 1, "block_tables": tables,
+                     "pattern": pat_cache}
         x = apply_norm(x, params["final_norm"], cfg.norm)
         logits = self.logits(params, x)[:, 0, :]
         return logits, new_cache

@@ -6,7 +6,10 @@ pages that become live as tokens are generated), packed with the best-fit
 DSA heuristic, and the resulting planned peak sizes the physical page pool.
 On top of that pool sits a continuous-batching scheduler (waiting queue,
 FCFS/priority admission, chunked prefill, preemption) and a batched decode
-engine with telemetry.
+engine with telemetry.  Decode executes either over a contiguous per-slot
+cache (``attn_mode="gather"``) or straight off per-layer page pools via the
+Pallas paged-attention kernel (``attn_mode="paged"`` — the page table is
+consumed in-kernel, no gather/copy; see kernels/paged_attention.py).
 
 Public API:
   - pages:     PagePlan, PagedKVCache, choose_page_tokens, paged_request_blocks

@@ -18,6 +18,7 @@ serving performs zero retraces (watch ``runner_compile_total`` /
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Optional, Sequence
 
@@ -54,6 +55,7 @@ class ServeEngine:
                  shared: Optional[SharedArena] = None,
                  metrics: Optional[ServeMetrics] = None,
                  use_runner: bool = True,
+                 attn_mode: str = "gather",
                  replan_interval: Optional[int] = 64):
         """``accounting_cfg`` lets the page pool account at full-size arch
         scale while a reduced model executes (the launch-driver pattern).
@@ -66,6 +68,13 @@ class ServeEngine:
 
         ``use_runner=False`` falls back to the legacy full-max_batch decode
         jit (the "slab" execution baseline the benches compare against).
+
+        ``attn_mode="paged"`` executes decode straight off per-layer page
+        pools: the PagedKVCache's exec page tables address the pools inside
+        the attention kernel, so no contiguous per-request KV copy ever
+        materializes.  Requires ``use_runner=True`` (a full-batch decode
+        would let stale slots scatter their next token into page 0) and a
+        pure-attention model (``model.supports_paged()``).
 
         ``replan_interval``: close a §4.3 epoch every this many steps even
         under sustained load (None = only when fully idle, the old behavior
@@ -112,7 +121,31 @@ class ServeEngine:
         self.decode_compiles = 0
         self.decode_steps = 0
         self.decode_time_s = 0.0
-        self.cache = model.init_cache(max_batch, max_len)
+        if attn_mode not in ("gather", "paged"):
+            raise ValueError(f"unknown attn_mode {attn_mode!r}")
+        self.attn_mode = attn_mode
+        if attn_mode == "paged":
+            if not use_runner:
+                raise ValueError(
+                    "attn_mode='paged' requires use_runner=True: the legacy "
+                    "full-batch decode advances every slot, so stale rows "
+                    "would scatter their KV into page 0")
+            if not (model.supports_paged() and self._pad_prefill):
+                raise ValueError(
+                    "attn_mode='paged' needs a pure-attention decoder "
+                    f"(pattern {model.cfg.block_pattern}, "
+                    f"tail {model.cfg.tail_pattern})")
+            ept = self.kv.page_tokens
+            # +1 page: the exec grant runs one token ahead of accounting
+            # (decode writes position T before append_token commits T+1)
+            self._pages_per_req = math.ceil(max_len / ept) + 1
+            self._pool_pages = max_batch * self._pages_per_req
+            self.cache = model.init_paged_cache(
+                max_batch, n_pages=self._pool_pages, page_tokens=ept,
+                pages_per_req=self._pages_per_req)
+            self._slot_pages = [0] * max_batch  # synced table-row lengths
+        else:
+            self.cache = model.init_cache(max_batch, max_len)
         self.tokens = jnp.zeros((max_batch,), jnp.int32)
         self.step_count = 0
         self.completed: dict[int, list[int]] = {}
@@ -138,10 +171,21 @@ class ServeEngine:
                       batch=int(tokens.shape[0]), total=self.decode_compiles)
 
     def warmup(self) -> None:
-        """Pre-compile every runner bucket so the serving loop never traces
-        a decode step (the zero-retrace invariant holds from step 0)."""
+        """Pre-compile every runner bucket *and* every prefill ladder shape
+        so the serving loop never traces (the zero-retrace invariant holds
+        from step 0 for decode and prefill alike)."""
         if self.runner is not None:
             self.runner.warmup(self.params, self.cache, self.tokens)
+        if self._pad_prefill:
+            padded = PREFILL_BUCKET_MIN
+            while True:
+                p = min(padded, self.max_len)
+                self.prefill(self.params,
+                             {"tokens": jnp.zeros((1, p), jnp.int32),
+                              "true_len": jnp.asarray(p, jnp.int32)})
+                if p >= self.max_len:
+                    break
+                padded *= 2
 
     # -- queue --------------------------------------------------------------------
     def enqueue(self, req: GenRequest) -> None:
@@ -225,7 +269,10 @@ class ServeEngine:
                       prompt_len=sr.prompt_len, slot=sr.slot)
         logits, cache1 = self.prefill(self.params,
                                       self._prefill_batch(sr.req.prompt))
-        self.cache = _merge_slot(self.cache, cache1, sr.slot, self.max_len)
+        if self.attn_mode == "paged":
+            self.cache = self._merge_paged(self.cache, cache1, sr)
+        else:
+            self.cache = _merge_slot(self.cache, cache1, sr.slot, self.max_len)
         # settle the merge here so its cost is attributed to prefill — the
         # async writes would otherwise be absorbed into the next decode
         # step's sync and pollute the measured decode step time
@@ -277,12 +324,64 @@ class ServeEngine:
             if sr.remaining <= 0:
                 self._finish(sr)
 
+    def _merge_paged(self, cache, cache1, sr: ScheduledRequest):
+        """Install one request into the paged cache: position clock, exec
+        page-table row, and the prefill KV cut into page_tokens chunks and
+        scattered to the granted pool rows.  The padded prompt tail (ladder
+        padding past ``true_len``) lands in granted pages where the per-row
+        position mask hides it until decode overwrites it in place."""
+        ept = self.kv.page_tokens
+        row = self.kv.exec_table(sr.rid)
+        n_rowp = len(row)
+        ids = jnp.asarray(row, jnp.int32)
+        table_row = jnp.zeros((self._pages_per_req,),
+                              jnp.int32).at[:n_rowp].set(ids)
+        new = dict(cache)
+        new["pos"] = cache["pos"].at[sr.slot].set(cache1["pos"][0])
+        new["block_tables"] = cache["block_tables"].at[sr.slot].set(table_row)
+        want = n_rowp * ept
+
+        def cut(x):                 # (G,1,S,kv,hd) -> (G,n_rowp,ept,kv,hd)
+            x = x[:, 0]
+            s = x.shape[1]
+            if s < want:
+                x = jnp.pad(x, ((0, 0), (0, want - s)) + ((0, 0),) *
+                            (x.ndim - 2))
+            elif s > want:          # ladder padding past the granted pages
+                x = x[:, :want]
+            return x.reshape(x.shape[0], n_rowp, ept, *x.shape[2:])
+
+        pat = {}
+        for i, entry in cache["pattern"].items():
+            c1 = cache1["pattern"][i]
+            pat[i] = {"k_pages": entry["k_pages"].at[:, ids].set(cut(c1["k"])),
+                      "v_pages": entry["v_pages"].at[:, ids].set(cut(c1["v"]))}
+        new["pattern"] = pat
+        self._slot_pages[sr.slot] = n_rowp
+        return new
+
+    def _sync_table_row(self, sr: ScheduledRequest) -> None:
+        """Mirror an exec-table growth into the device block-table row (a
+        no-op in steady state: rows only change when a page is granted)."""
+        row = self.kv.exec_table(sr.rid)
+        if len(row) == self._slot_pages[sr.slot]:
+            return
+        assert len(row) <= self._pages_per_req and \
+            max(row) < self._pool_pages, (row, self._pool_pages)
+        arr = jnp.zeros((self._pages_per_req,),
+                        jnp.int32).at[:len(row)].set(jnp.asarray(row, jnp.int32))
+        self.cache["block_tables"] = \
+            self.cache["block_tables"].at[sr.slot].set(arr)
+        self._slot_pages[sr.slot] = len(row)
+
     def _grow(self, sr: ScheduledRequest) -> bool:
         """Account one generated token; preempt the youngest request until the
         growth page fits.  Returns False if ``sr`` itself was evicted."""
         while True:
             try:
                 self.kv.append_token(sr.rid)
+                if self.attn_mode == "paged":
+                    self._sync_table_row(sr)
                 return True
             except PagePoolExhausted:
                 self.kv.request_replan()    # observed lengths outgrew the plan

@@ -233,6 +233,21 @@ class PagedKVCache:
         self._addrs: dict[int, list[int]] = {}     # rid -> arena addrs
         self._tokens: dict[int, int] = {}          # rid -> context tokens held
         self.n_grown = 0                           # pool resizes at boundaries
+        # Execution page tables: token-granularity page ids addressing the
+        # *physical* KV pool the paged kernel reads.  Accounting page ids
+        # above cannot serve this role — ``page_bytes_for`` aligns the page
+        # and ``pages_for_tokens`` folds in state bytes, so the accounting
+        # page count of a request need not equal ceil(tokens / page_tokens).
+        # Exec pages are granted in lockstep with the accounting lifecycle
+        # (admit/append/release) with a one-token lookahead: the engine
+        # decodes (writing KV at position T) *before* append_token commits
+        # token T+1, so the page holding position T must already be granted.
+        # The exec pool grows on demand and recycles LIFO; its high-water is
+        # bounded by max_batch * (ceil(max_len / page_tokens) + 1), so it
+        # never exhausts and preemption stays purely accounting-driven.
+        self.exec_tables: dict[int, list[int]] = {}
+        self._exec_free: list[int] = []
+        self.exec_n_pages = 0
 
     # -- capacity ---------------------------------------------------------------
     @property
@@ -262,6 +277,23 @@ class PagedKVCache:
         self.tables[rid].append(self._free.pop())
         self._addrs[rid].append(self.arena.alloc(self.page_bytes))
 
+    def _exec_secure(self, rid: int, tokens: int) -> None:
+        """Grant exec pages covering ``tokens`` token slots (never raises —
+        the exec pool extends on demand; exhaustion policy lives entirely on
+        the accounting side so preemption dynamics are mode-independent)."""
+        need = max(1, math.ceil(tokens / self.page_tokens))
+        tbl = self.exec_tables[rid]
+        while len(tbl) < need:
+            if not self._exec_free:
+                self._exec_free.append(self.exec_n_pages)
+                self.exec_n_pages += 1
+            tbl.append(self._exec_free.pop())
+
+    def exec_table(self, rid: int) -> list[int]:
+        """Physical page-index row for ``rid`` (token t lives at page
+        ``exec_table(rid)[t // page_tokens]``, offset ``t % page_tokens``)."""
+        return self.exec_tables[rid]
+
     def admit(self, rid: int, prompt_len: int) -> list[int]:
         """Allocate the prompt/state pages; returns the page table."""
         if rid in self.tables:
@@ -275,6 +307,8 @@ class PagedKVCache:
         self._tokens[rid] = prompt_len
         for _ in range(need):
             self._grab_page(rid)
+        self.exec_tables[rid] = []
+        self._exec_secure(rid, prompt_len + 1)      # +1: first decode write
         return self.tables[rid]
 
     def append_token(self, rid: int) -> None:
@@ -287,6 +321,7 @@ class PagedKVCache:
         while len(self.tables[rid]) < need:
             self._grab_page(rid)
         self._tokens[rid] = new_tokens
+        self._exec_secure(rid, new_tokens + 1)      # +1: next decode write
 
     def ensure_free(self, n: int) -> None:
         """Grow the pool until at least ``n`` pages are free (last-resort
@@ -305,6 +340,7 @@ class PagedKVCache:
         for addr in self._addrs.pop(rid, []):
             self.arena.free(addr)
         self._tokens.pop(rid, None)
+        self._exec_free.extend(self.exec_tables.pop(rid, []))
 
     def request_replan(self, cause: str = "decode-outrun") -> None:
         """Flag observed pressure (e.g. a preemption): replan at the boundary.
@@ -354,6 +390,8 @@ class PagedKVCache:
             "pool_bytes": self.n_pages * self.page_bytes,
             "occupancy": self.occupancy(),
             "n_pool_resize": self.n_grown,
+            "exec_n_pages": self.exec_n_pages,
+            "exec_live_pages": sum(len(t) for t in self.exec_tables.values()),
             "n_reopt": a["n_reopt"],
             "planned_peak": a["peak"],
             "max_peak": a["max_peak"],

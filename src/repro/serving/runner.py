@@ -46,8 +46,14 @@ def bucket_ladder(max_batch: int) -> tuple[int, ...]:
     return tuple(out)
 
 
-def _batch_axis(path: tuple) -> int:
-    """Pattern-group cache leaves are (G, B, ...); everything else (B, ...)."""
+def _batch_axis(path: tuple):
+    """Pattern-group cache leaves are (G, B, ...); everything else (B, ...).
+    Paged pool leaves (``*_pages``) carry no batch axis at all — they are
+    shared by every slot and pass through the gather/scatter wholesale, which
+    is precisely how the paged path drops the in-executable KV copy: only the
+    (B,)-small pos/block-table/token rows are ever gathered."""
+    if path and path[-1].endswith("_pages"):
+        return None
     return 1 if "pattern" in path else 0
 
 
@@ -55,7 +61,8 @@ def _gather_rows(cache, slots):
     """Sub-cache of the rows named by ``slots`` (bucket-sized batch)."""
     def take(kp, leaf):
         path = tuple(str(getattr(k, "key", "")) for k in kp)
-        return jnp.take(leaf, slots, axis=_batch_axis(path))
+        axis = _batch_axis(path)
+        return leaf if axis is None else jnp.take(leaf, slots, axis=axis)
     return jax.tree_util.tree_map_with_path(take, cache)
 
 
@@ -66,7 +73,10 @@ def _scatter_rows(cache, sub, slots):
     for ((kp, full), s) in zip(
             jax.tree_util.tree_flatten_with_path(cache)[0], flat_sub):
         path = tuple(str(getattr(k, "key", "")) for k in kp)
-        if _batch_axis(path) == 1:
+        axis = _batch_axis(path)
+        if axis is None:                # shared pool: sub IS the full leaf
+            out.append(s)
+        elif axis == 1:
             out.append(full.at[:, slots].set(s))
         else:
             out.append(full.at[slots].set(s))

@@ -5,6 +5,12 @@ import sys
 # override is dryrun.py-only (set there before any jax import).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Pallas kernels run in interpret mode on CPU so the differential kernel
+# oracle (tests/test_paged_attention.py and friends) is CI-runnable without
+# an accelerator.  Set REPRO_PALLAS_INTERPRET=0 to exercise the compiled
+# path on a real TPU/GPU host.
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402

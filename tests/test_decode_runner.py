@@ -126,6 +126,101 @@ def test_zero_recompiles_after_warmup(tiny_model):
     assert reg.counter("runner_compile_total").value == warm_counter
 
 
+def test_warmup_precompiles_prefill_ladder(tiny_model):
+    """warmup() walks the whole prompt ladder, so a warmed engine performs
+    zero prefill retraces at serving time (not just zero decode retraces)."""
+    cfg, model, params = tiny_model
+    lengths = [5, 6, 7, 9, 11, 13, 17, 23]
+    trace = [Request(rid=i + 1, prompt_len=n, gen_len=2, arrival=2 * i)
+             for i, n in enumerate(lengths)]
+    live = [GenRequest(rid=r.rid, prompt=_prompt(cfg, r.rid, r.prompt_len),
+                       gen_len=r.gen_len, arrival=r.arrival) for r in trace]
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=32,
+                      max_batch=4, page_tokens=8)
+    eng.warmup()
+    assert eng.prefill_compiles == 3                # buckets {8, 16, 32}
+    warm = eng.prefill_compiles
+    summary = eng.run(live)
+    assert summary["n_completed"] == len(lengths)
+    assert eng.prefill_compiles == warm             # flat: ladder pre-warmed
+
+
+# ---------------------------------------------------------------------------
+# the paged execution path: token-exactness and the zero-retrace invariant
+# ---------------------------------------------------------------------------
+
+
+def _churn_workload(cfg, n=24):
+    """Profile says short generations; live traffic runs much longer, so the
+    pool is undersized and decode-outrun preemptions churn the batch."""
+    trace = [Request(rid=i + 1, prompt_len=5 + (3 * i) % 12, gen_len=4,
+                     arrival=2 * i) for i in range(n)]
+    live = [GenRequest(rid=r.rid, prompt=_prompt(cfg, r.rid, r.prompt_len),
+                       gen_len=10 + r.rid % 7, arrival=r.arrival)
+            for r in trace]
+    return trace, live
+
+
+def _run_mode(model, params, trace, live, attn_mode):
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
+                      max_batch=4, page_tokens=8, attn_mode=attn_mode)
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        eng.warmup()
+        warm_runner = eng.runner.n_compiles
+        warm_prefill = eng.prefill_compiles
+        summary = eng.run(live)
+    assert eng.runner.n_compiles == warm_runner     # zero decode retraces
+    assert eng.prefill_compiles == warm_prefill     # zero prefill retraces
+    return eng, summary
+
+
+def test_paged_token_parity_under_preemption_churn(tiny_model):
+    """The whole PR's gate: the paged kernel path must be token-exact
+    against the legacy gather path across a run with real preemption churn
+    (restarts, page recycling, table-row rewrites), with the runner compile
+    counters flat in both modes."""
+    cfg, model, params = tiny_model
+    trace, live = _churn_workload(cfg)
+    gather, s_g = _run_mode(model, params, trace, live, "gather")
+    paged, s_p = _run_mode(model, params, trace, live, "paged")
+    assert s_g["n_completed"] == s_p["n_completed"] == len(live)
+    assert s_p["n_preemptions"] == s_g["n_preemptions"] > 0  # genuine churn
+    assert paged.completed == gather.completed      # token-exact, every rid
+    assert paged.step_count >= 100                  # sustained churn window
+
+
+def test_paged_staggered_admissions_match_isolated_decode(tiny_model):
+    """Paged rows must also reproduce isolated single-request greedy decode
+    (same oracle as the gather-path staggered test)."""
+    cfg, model, params = tiny_model
+    shapes = [(1, 5, 0), (2, 11, 1), (3, 17, 3), (4, 7, 5)]
+    trace = [Request(rid=r, prompt_len=n, gen_len=8, arrival=a)
+             for r, n, a in shapes]
+    live = [GenRequest(rid=r, prompt=_prompt(cfg, r, n), gen_len=8, arrival=a)
+            for r, n, a in shapes]
+    eng = ServeEngine(model, params, sample_trace=trace, max_len=64,
+                      max_batch=4, page_tokens=8, attn_mode="paged")
+    summary = eng.run(live)
+    assert summary["n_completed"] == 4
+    assert summary["max_concurrent"] >= 2
+    for r in live:
+        ref = _greedy_reference(model, params, r.prompt, 8, 64)
+        assert eng.completed[r.rid] == ref, f"rid={r.rid}"
+
+
+def test_paged_mode_requires_runner(tiny_model):
+    cfg, model, params = tiny_model
+    trace = [Request(rid=1, prompt_len=8, gen_len=4, arrival=0)]
+    with pytest.raises(ValueError, match="use_runner"):
+        ServeEngine(model, params, sample_trace=trace, max_len=32,
+                    max_batch=2, page_tokens=8, use_runner=False,
+                    attn_mode="paged")
+    with pytest.raises(ValueError, match="attn_mode"):
+        ServeEngine(model, params, sample_trace=trace, max_len=32,
+                    max_batch=2, page_tokens=8, attn_mode="chunky")
+
+
 def test_prefill_length_ladder_bounds_retraces(tiny_model):
     """8 distinct prompt lengths must collapse onto the power-of-two ladder
     (3 buckets here), not trace once per length."""

@@ -13,15 +13,18 @@ Deterministic seeded sweeps always run; when hypothesis is installed (CI
 installs the ``test`` extra) the same generators run as property tests with
 minimized counterexamples.
 """
+import math
 import random
+from types import SimpleNamespace
 
 import pytest
 
-from repro.core import (MemoryProfile, SharedArena, best_fit, make_profile,
-                        solve_exact)
+from repro.core import (Block, MemoryProfile, SharedArena, best_fit,
+                        make_profile, solve_exact)
 from repro.remat import plan_evictions
 from repro.runtime.serve_lib import Request
-from repro.serving.pages import paged_request_blocks
+from repro.serving.pages import (PagedKVCache, PagePoolExhausted,
+                                 paged_request_blocks)
 
 try:
     from hypothesis import given, settings
@@ -107,6 +110,115 @@ def check_shared(trace, train_profile: MemoryProfile, steps: int) -> None:
     assert all(r >= 0 for r in plan.reserves.values())
 
 
+def kv_op_sequence(seed: int, n_ops: int) -> list[tuple[str, int]]:
+    """A random admit/append/release program (args resolved against the live
+    set at execution time, so every sequence is valid by construction)."""
+    rng = random.Random(seed)
+    return [(rng.choices(("admit", "append", "release"),
+                         weights=(3, 11, 2))[0], rng.randint(0, 63))
+            for _ in range(n_ops)]
+
+
+def check_kv_op_sequence(ops, page_tokens: int) -> None:
+    """Drive a live PagedKVCache through an arbitrary admit/append_token/
+    release/preempt sequence and assert, after every op, that BOTH page
+    namespaces stay sound:
+
+      * accounting tables: pages disjoint across live rids, in-bounds;
+      * exec tables: pages disjoint across live rids, in-bounds of the grown
+        exec pool, and covering tokens+1 slots (the one-token lookahead the
+        paged decode write depends on).
+
+    The whole run is then replayed through ``assert_no_live_overlap``: every
+    page grant becomes a (time x address) rectangle at offset ``pid``, so a
+    double-granted page surfaces as a live overlap in the same independent
+    checker the planners are held to."""
+    cfg = _serving_cfg()
+    trace = [Request(rid=1, prompt_len=24, gen_len=16, arrival=0)]
+    kv = PagedKVCache(cfg, trace, page_tokens=page_tokens)
+    live: set[int] = set()
+    next_rid = 1
+    open_rects: dict[tuple, int] = {}       # (kind, rid, pid) -> start step
+    closed: list[tuple[str, int, int, int]] = []
+    prev: dict[tuple, set[int]] = {}
+
+    def snapshot(step: int) -> None:
+        cur = {}
+        for kind, tabs in (("acct", kv.tables), ("exec", kv.exec_tables)):
+            for rid, tbl in tabs.items():
+                cur[(kind, rid)] = set(tbl)
+        for key, pages in cur.items():
+            for pid in pages - prev.get(key, set()):
+                open_rects[key + (pid,)] = step
+        for key, pages in prev.items():
+            for pid in pages - cur.get(key, set()):
+                closed.append((key[0], pid, open_rects.pop(key + (pid,)),
+                               step))
+        prev.clear()
+        prev.update(cur)
+
+    def invariants() -> None:
+        assert set(kv.tables) == live == set(kv.exec_tables)
+        for tabs, bound, free in ((kv.tables, kv.n_pages, kv._free),
+                                  (kv.exec_tables, kv.exec_n_pages,
+                                   kv._exec_free)):
+            seen: set[int] = set()
+            for rid in live:
+                row = tabs[rid]
+                assert len(set(row)) == len(row), f"dup in rid={rid}: {row}"
+                for pid in row:
+                    assert 0 <= pid < bound, (pid, bound)
+                    assert pid not in seen, f"page {pid} granted twice"
+                    seen.add(pid)
+            assert seen.isdisjoint(free)
+        for rid in live:                    # lookahead coverage
+            assert len(kv.exec_tables[rid]) >= math.ceil(
+                (kv._tokens[rid] + 1) / kv.page_tokens)
+
+    for step, (op, arg) in enumerate(ops):
+        if op == "admit":
+            try:
+                kv.admit(next_rid, prompt_len=1 + arg % 40)
+                live.add(next_rid)
+            except PagePoolExhausted:
+                pass
+            next_rid += 1
+        elif op == "append" and live:
+            rid = sorted(live)[arg % len(live)]
+            try:
+                kv.append_token(rid)
+            except PagePoolExhausted:       # engine path: evict the youngest
+                victim = max(live)
+                kv.release(victim)
+                live.discard(victim)
+                if rid in live:
+                    try:
+                        kv.append_token(rid)
+                    except PagePoolExhausted:
+                        pass
+        elif op == "release" and live:
+            rid = sorted(live)[arg % len(live)]
+            kv.release(rid)
+            live.discard(rid)
+        invariants()
+        snapshot(step)
+
+    for key, start in open_rects.items():   # close out still-live grants
+        closed.append((key[0], key[2], start, len(ops) + 1))
+    for kind in ("acct", "exec"):
+        rects = [(pid, s, e) for k, pid, s, e in closed if k == kind and e > s]
+        if not rects:
+            continue
+        prof = MemoryProfile(
+            blocks=[Block(bid=i, size=1, start=s, end=e)
+                    for i, (pid, s, e) in enumerate(rects)],
+            clock_end=max(e for _, _, e in rects))
+        plan = SimpleNamespace(
+            offsets={i: pid for i, (pid, _, _) in enumerate(rects)},
+            peak=max(pid for pid, _, _ in rects) + 1)
+        assert_no_live_overlap(prof, plan)
+
+
 # ---------------------------------------------------------------------------
 # deterministic seeded sweeps (always run, hypothesis or not)
 # ---------------------------------------------------------------------------
@@ -126,6 +238,12 @@ def test_remat_evicted_profiles_never_overlap(seed):
 def test_mixed_tenant_shared_plans_never_overlap(seed):
     check_shared(staircase_trace(seed, 4), random_profile(seed + 50, 8),
                  steps=1 + seed % 3)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_kv_lifecycle_pages_stay_disjoint(seed):
+    check_kv_op_sequence(kv_op_sequence(seed, 60),
+                         page_tokens=4 << (seed % 3))
 
 
 def test_shared_plan_survives_boundary_replan():
@@ -186,3 +304,13 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=25, deadline=None)
     def test_prop_mixed_tenant_shared_plans_never_overlap(trace, prof, steps):
         check_shared(trace, prof, steps)
+
+    op_programs = st.lists(
+        st.tuples(st.sampled_from(["admit", "append", "append", "release"]),
+                  st.integers(0, 63)),
+        min_size=1, max_size=80)
+
+    @given(op_programs, st.sampled_from([4, 8, 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_prop_kv_lifecycle_pages_stay_disjoint(ops, page_tokens):
+        check_kv_op_sequence(ops, page_tokens)
