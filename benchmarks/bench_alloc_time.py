@@ -6,15 +6,41 @@ precomputed-address return.  We replay identical event streams through the
 Chainer-style pool, the naive allocator and the planned arena and report
 us/event + the pool's search-steps/alloc (the quantity that grows with pool
 fragmentation and caused the paper's seq2seq slowdown).
+
+Beyond the paper, ``replan_rows`` times §4.3 replans on a serving-style
+churn trace: each step replaces a fraction of the live requests, and the
+warm-started incremental refit (core.bestfit.refit) is raced against a full
+repack.  Results land in ``BENCH_packing.json`` (shared with
+bench_heuristic's packing-quality section) for the regression gate.
 """
 from __future__ import annotations
 
+import json
+import os
 import random
 import time
 
 from repro.core import ArenaAllocator, MemoryRecorder, NaiveAllocator, \
-    PoolAllocator, replay
-from repro.core.events import make_profile
+    PoolAllocator, refit, replay
+from repro.core.events import Block, MemoryProfile, make_profile
+
+PACKING_JSON = "BENCH_packing.json"
+
+
+def merge_packing_json(updates: dict, path: str = PACKING_JSON) -> None:
+    """Read-modify-write the shared packing-quality JSON (two bench sections
+    contribute to it; run.py executes them sequentially)."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data.update(updates)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"# wrote {path} ({', '.join(sorted(updates))})")
 
 
 def synth_profile(n_blocks: int, seed: int = 0):
@@ -59,9 +85,74 @@ def rows(quick: bool = False):
     return out
 
 
+def churn_trace(n_blocks: int = 400, steps: int = 12, frac: float = 0.1,
+                seed: int = 3) -> list:
+    """Serving-style churn: start from a synthetic profile and, each step,
+    replace ``frac`` of the requests (new size + lifetime at the same slot)
+    — the §4.3 situation where most of the previous plan is still right."""
+    base = synth_profile(n_blocks, seed)
+    rng = random.Random(seed + 1)
+    sizes = [4096, 65536, 1 << 20, 4 << 20, 16 << 20]
+    profs = [base]
+    blocks = list(base.blocks)
+    for _ in range(steps):
+        for i in rng.sample(range(len(blocks)), max(1, int(frac * n_blocks))):
+            b = blocks[i]
+            blocks[i] = Block(bid=b.bid, size=rng.choice(sizes),
+                              start=b.start,
+                              end=b.start + rng.randint(1, 60), tag=b.tag)
+        profs.append(MemoryProfile(blocks=list(blocks),
+                                   clock_end=base.clock_end))
+    return profs
+
+
+def replan_rows(quick: bool = False):
+    """Full repack vs warm-started incremental refit over the churn trace."""
+    from repro.core import best_fit
+    profs = churn_trace(n_blocks=200 if quick else 400,
+                        steps=6 if quick else 12)
+    prev_prof = profs[0]
+    prev_plan = best_fit(prev_prof)
+    full_s = incr_s = 0.0
+    worst_ratio = 0.0
+    kept_frac_min = 1.0
+    n_steps = 0
+    for prof in profs[1:]:
+        t0 = time.perf_counter()
+        full = best_fit(prof)
+        full_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        incr = refit(prof, prev_prof, prev_plan)
+        incr_s += time.perf_counter() - t0
+        n_steps += 1
+        worst_ratio = max(worst_ratio, incr.peak / max(full.peak, 1))
+        if incr.stats.get("mode") == "incremental":
+            kept_frac_min = min(kept_frac_min,
+                                incr.stats["n_kept"] / max(1, incr.stats["n_blocks"]))
+        prev_prof, prev_plan = prof, incr
+    full_us = 1e6 * full_s / n_steps
+    incr_us = 1e6 * incr_s / n_steps
+    speedup = full_s / max(incr_s, 1e-12)
+    merge_packing_json({"replan": {
+        "n_steps": n_steps,
+        "n_blocks": profs[0].n,
+        "full_us_per_replan": full_us,
+        "incremental_us_per_replan": incr_us,
+        # same-run ratio: both sides timed in this process, so
+        # machine-comparable (this is what the regression gate checks)
+        "speedup_full_vs_incremental": speedup,
+        "incremental_peak_ratio_worst": worst_ratio,
+        "kept_frac_min": kept_frac_min,
+    }})
+    return [("replan/full", full_us, f"n_steps={n_steps}"),
+            ("replan/incremental", incr_us,
+             f"speedup={speedup:.1f}x;peak_ratio_worst={worst_ratio:.3f};"
+             f"kept_frac_min={kept_frac_min:.2f}")]
+
+
 def main(quick: bool = False):
     print("# Fig3: name,us_per_call,derived")
-    for name, us, derived in rows(quick):
+    for name, us, derived in rows(quick) + replan_rows(quick):
         print(f"fig3/{name},{us:.3f},{derived}")
 
 

@@ -76,6 +76,23 @@ def _bench_config(arch: str, overrides: dict, *, seq: int, batch: int,
             jax.block_until_ready(step(params, {"tokens": tokens}))
         times[mode] = (time.perf_counter() - t0) / timing_iters
 
+    # cost-model calibration: re-price the accepted evictions against the
+    # *achieved* FLOP rate of the measured no-remat step instead of the
+    # datasheet peak (falls back to datasheet when the measurement is
+    # unusable).  measured_step_from_bench() reads the same number back out
+    # of the emitted JSON for later runs.
+    from repro.remat import PEAK_FLOPS, CostModel
+    cm_cal = CostModel.from_profile(prof_none,
+                                    measured_step_s=times["none"])
+    calibration = {
+        "measured_step_s": times["none"],
+        "effective_flops": cm_cal.peak_flops,
+        "fraction_of_peak": cm_cal.peak_flops / PEAK_FLOPS,
+        "calibrated": cm_cal.calibrated,
+        "overhead_s_datasheet": ev.overhead_s,
+        "overhead_s_calibrated": cm_cal.total_overhead_s(ev.evicted_bids),
+    }
+
     # plan-vs-actual: the search promised ev.peak on its transformed profile;
     # the re-traced (verified) jaxpr is what the policy actually achieves
     target = int(TARGET_RATIO * peaks["none"])
@@ -89,6 +106,7 @@ def _bench_config(arch: str, overrides: dict, *, seq: int, batch: int,
         "full_vs_none": peaks["full"] / peaks["none"],
         "eviction": ev.summary(),
         "policy": policy.describe(),
+        "calibration": calibration,
         "drift": {
             "target_peak": target,
             "search_peak": ev.peak,

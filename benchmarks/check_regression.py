@@ -10,7 +10,7 @@ trade-off lands by refreshing the baseline in the same PR:
 
   BENCH_QUICK=1 python benchmarks/run.py --quick
   cp BENCH_serving.json BENCH_remat.json BENCH_unified.json \
-     BENCH_scenarios.json benchmarks/baselines/
+     BENCH_scenarios.json BENCH_packing.json benchmarks/baselines/
 
 Only deterministic metrics are compared (packed peaks, ratios, counts, and
 the scenario matrix's step-clock SLO numbers) — raw wall-clock throughput
@@ -71,6 +71,22 @@ KEY_METRICS = [
     ("BENCH_serving.json", "measured.speedup_kernel_vs_gather",
      "lower_is_worse", 0.75),
     ("BENCH_serving.json", "kernel.max_abs_err", "higher_is_worse", 10.0),
+    # packing-quality matrix (bench_heuristic + bench_alloc_time).  The
+    # reordered pass must never lose to greedy (identity is a candidate:
+    # baseline 1, any 0 warns) and must keep strictly beating it somewhere
+    # (baseline >= 2 profiles); exact gaps are deterministic ratios; the
+    # replan speedup is a same-run ratio (wide tol), the incremental peak
+    # ratio is deterministic (seeded churn trace).
+    ("BENCH_packing.json", "reordered_leq_greedy_all", "lower_is_worse", 0.0),
+    ("BENCH_packing.json", "n_strict_improvements", "lower_is_worse", 0.0),
+    ("BENCH_packing.json", "exact.greedy_gap_worst", "higher_is_worse", 0.05),
+    ("BENCH_packing.json", "exact.reordered_gap_worst",
+     "higher_is_worse", 0.05),
+    ("BENCH_packing.json", "replan.speedup_full_vs_incremental",
+     "lower_is_worse", 0.5),
+    ("BENCH_packing.json", "replan.incremental_peak_ratio_worst",
+     "higher_is_worse", 0.1),
+    ("BENCH_packing.json", "replan.kept_frac_min", "lower_is_worse", 0.1),
     ("BENCH_remat.json", "configs.0.planned_vs_none", "higher_is_worse", 0.05),
     ("BENCH_remat.json", "configs.0.eviction.n_evicted", "higher_is_worse", 0.25),
     ("BENCH_remat.json", "max_feasible_batch.max_batch_remat",

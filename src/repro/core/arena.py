@@ -23,7 +23,7 @@ import time as _time
 from contextlib import contextmanager
 from typing import Callable
 
-from .bestfit import best_fit
+from .bestfit import best_fit, refit
 from .dsa import AllocationPlan, validate_plan
 from .events import DEFAULT_ALIGNMENT, Block, MemoryProfile, align
 from .pool import PoolAllocator
@@ -42,7 +42,7 @@ class ArenaAllocator:
     def __init__(self, profile: MemoryProfile, base: int = 0,
                  alignment: int = DEFAULT_ALIGNMENT,
                  solver: Callable[[MemoryProfile], AllocationPlan] = best_fit,
-                 mode: str = "immediate"):
+                 mode: str = "immediate", incremental: bool = True):
         """``mode``:
         * "immediate" — the paper's §4.3 literally: a larger-than-profiled
           request at a known id replans in place (right for stable streams
@@ -51,9 +51,16 @@ class ArenaAllocator:
           the iteration and the boundary replan is CACHED per stream
           signature, so workloads cycling over a finite set of shapes
           (seq2seq length buckets) stop replanning once warm.
+
+        ``incremental=True`` warm-starts every replan from the previous
+        (profile, plan): blocks whose rectangles did not change keep their
+        offsets and only the changed ones are re-placed (``bestfit.refit``,
+        which falls back to a full repack when too much changed or the
+        incremental peak degrades past tolerance).
         """
         assert mode in ("immediate", "signature"), mode
         self.mode = mode
+        self.incremental = incremental
         self._solver = solver
         self.alignment = alignment
         self.base = base
@@ -67,6 +74,9 @@ class ArenaAllocator:
         self.n_plan_switch = 0
         self.n_fallback = 0
         self.reopt_seconds = 0.0
+        self.n_incr_replans = 0
+        self.n_full_replans = 0
+        self.last_replan_s = 0.0
         self._interrupted = 0
         self._fallback = PoolAllocator(alignment=alignment)
         self._overflow = PoolAllocator(alignment=alignment)
@@ -228,7 +238,8 @@ class ArenaAllocator:
         self._install(MemoryProfile(blocks=blocks,
                                     retained_bytes=self.profile.retained_bytes,
                                     clock_end=self.profile.clock_end,
-                                    meta=self.profile.meta))
+                                    meta=self.profile.meta),
+                      cause="oversize-immediate")
         self.reopt_seconds += _time.perf_counter() - t0
 
     def _replan_from_shadow(self) -> None:
@@ -262,20 +273,33 @@ class ArenaAllocator:
         self.max_peak = max(self.max_peak, self.plan.peak)
         self.reopt_seconds += _time.perf_counter() - t0
 
-    def _install(self, profile: MemoryProfile) -> None:
+    def _install(self, profile: MemoryProfile, cause: str = "boundary") -> None:
+        t0 = _time.perf_counter()
         old_peak = self.plan.peak
+        if self.incremental:
+            plan = refit(profile, self.profile, self.plan, solver=self._solver)
+        else:
+            plan = self._solver(profile)
+            plan.stats.setdefault("mode", "full")
+        validate_plan(profile, plan)
         self.profile = profile
-        self.plan = self._solver(profile)
-        validate_plan(profile, self.plan)
+        self.plan = plan
+        replan_mode = plan.stats.get("mode", "full")
+        if replan_mode == "incremental":
+            self.n_incr_replans += 1
+        else:
+            self.n_full_replans += 1
         self._by_bid = {b.bid: b for b in profile.blocks}
         self._lam0 = min((b.bid for b in profile.blocks), default=1)
         self.n_reopt += 1
         self.max_peak = max(self.max_peak, self.plan.peak)
+        self.last_replan_s = _time.perf_counter() - t0
         t = get_tracer()
         if t is not None:
             t.instant("replan", "arena", track="arena", n_reopt=self.n_reopt,
                       old_peak=old_peak, new_peak=self.plan.peak,
-                      n_blocks=profile.n)
+                      n_blocks=profile.n, cause=cause, mode=replan_mode,
+                      seconds=self.last_replan_s)
 
     def stats(self) -> dict:
         return {
@@ -283,6 +307,9 @@ class ArenaAllocator:
             "max_peak": self.max_peak,
             "n_blocks": self.profile.n,
             "n_reopt": self.n_reopt,
+            "n_incr_replans": self.n_incr_replans,
+            "n_full_replans": self.n_full_replans,
+            "last_replan_s": self.last_replan_s,
             "n_plan_switch": self.n_plan_switch,
             "reopt_seconds": self.reopt_seconds,
             "n_fallback": self.n_fallback,

@@ -149,11 +149,19 @@ def profile_jaxpr(jaxpr: jcore.ClosedJaxpr, *, alignment: int = DEFAULT_ALIGNMEN
         retained_vars.add(v)
 
     producer: dict[Any, Any] = {}
+    # True dataflow edges on the event clock: every consumption (not just the
+    # last) yields (producer tick, consumer tick), so repro.core.reorder can
+    # reorder lifetimes without breaking chains through intermediate
+    # consumers.  Ticks are 2t (allocation ticks), matching block starts and
+    # ends-1.
+    op_edges: set[tuple[int, int]] = set()
     for t, eqn in enumerate(eqns):
         for v in eqn.invars:
             if isinstance(v, jcore.Literal):
                 continue
             last_use[v] = t
+            if v in produced_at:
+                op_edges.add((2 * produced_at[v], 2 * t))
         # See through checkpoint save-markers (identity reduce_precision) to
         # the real producer, so tags stay policy-addressable when profiling a
         # step that already runs under a jax.checkpoint policy.
@@ -206,7 +214,8 @@ def profile_jaxpr(jaxpr: jcore.ClosedJaxpr, *, alignment: int = DEFAULT_ALIGNMEN
         retained_bytes=retained,
         clock_end=2 * n_eqns + 1,
         meta={"n_eqns": n_eqns, "source": "jaxpr", "block_flops": block_flops,
-              "block_steps": block_steps},
+              "block_steps": block_steps,
+              "op_edges": sorted([u, v] for u, v in op_edges)},
     )
 
 

@@ -19,6 +19,8 @@ from .events import MemoryProfile
 from .exact import solve_exact
 from .liveness import profile_fn
 from .pool import NaiveAllocator, PoolAllocator, replay
+from .reorder import ReorderResult, reorder_profile
+from .solvers import SolverUnavailable, have_solver, solve_milp
 
 # TPU v5e physical budgets (DESIGN.md §8.2).
 VMEM_BYTES = 16 * 1024 * 1024          # ~16 MiB per core
@@ -30,6 +32,7 @@ ICI_BW = 50e9                          # bytes/s/link
 _SOLVERS: dict[str, Callable[[MemoryProfile], AllocationPlan]] = {
     "bestfit": best_fit,
     "exact": solve_exact,
+    "milp": solve_milp,        # needs the [solver] extra (scipy/HiGHS)
 }
 
 
@@ -45,14 +48,43 @@ class MemoryPlanner:
     def __init__(self, solver: str = "bestfit"):
         if solver not in _SOLVERS:
             raise ValueError(f"unknown solver {solver!r}; have {sorted(_SOLVERS)}")
+        if solver == "milp" and not have_solver():
+            raise SolverUnavailable(
+                "solver='milp' needs scipy; install the [solver] extra")
         self.solver_name = solver
         self.solver = _SOLVERS[solver]
 
     # -- core workflow ---------------------------------------------------------
-    def plan(self, profile: MemoryProfile) -> AllocationPlan:
+    def plan(self, profile: MemoryProfile, *,
+             reorder: str | bool | None = None) -> AllocationPlan:
+        """Solve one DSA instance; ``reorder`` runs the slack-reordering pass
+        first (``"greedy"`` / ``"ils"`` / ``True`` = ils).
+
+        With reordering the returned placement is for the *reordered*
+        schedule — use :meth:`plan_reordered` when the caller also needs the
+        reordered lifetimes.
+        """
+        if reorder:
+            return self.plan_reordered(profile, mode=reorder).plan
         plan = self.solver(profile)
         validate_plan(profile, plan)
         return plan
+
+    def plan_reordered(self, profile: MemoryProfile, *,
+                       mode: str | bool = "ils", rounds: int = 8,
+                       seed: int = 0) -> ReorderResult:
+        """Reorder lifetimes within recovered dependency slack, then pack.
+
+        The identity order is always a candidate, so
+        ``result.peak <= plan(profile).peak``; the result carries both the
+        reordered profile and its validated plan.
+        """
+        if mode is True:
+            mode = "ils"
+        result = reorder_profile(profile, mode=mode, rounds=rounds, seed=seed,
+                                 solver=self.solver)
+        validate_plan(result.profile, result.plan)
+        return result
 
     def plan_fn(self, fn: Callable, *args, **kwargs) -> PlanReport:
         """Profile a python/JAX function via jaxpr liveness, solve, compare."""
@@ -120,7 +152,9 @@ class MemoryPlanner:
                         max_evict: int = 256,
                         candidate_filter=None,
                         price_mode: str = "auto",
-                        view=None):
+                        view=None,
+                        reorder: str | bool | None = None,
+                        groups=None):
         """Evict activations (recompute/offload) until the packed peak meets
         the target; returns the ``repro.remat.EvictionPlan``.
 
@@ -128,14 +162,17 @@ class MemoryPlanner:
         ``profile.retained_bytes``); with neither target the search buys
         every peak reduction it can find.  ``view`` (a SharedArena tenant
         view) makes the search plan against the training tenant's share of
-        the joint budget instead.
+        the joint budget instead.  ``reorder`` makes every eviction trial
+        repack with the slack-reordering pass; ``groups`` restricts
+        candidates to the given pattern groups (``remat.policy.pattern_group``).
         """
         from ..remat import plan_evictions
         return plan_evictions(profile, target_peak=target_peak,
                               target_ratio=target_ratio, max_evict=max_evict,
                               candidate_filter=candidate_filter,
                               price_mode=price_mode,
-                              solver=self.solver, view=view)
+                              solver=self.solver, view=view,
+                              reorder=reorder, groups=groups)
 
     # -- unified serve x train planning (core.unified) ----------------------------
     def plan_shared(self, *, hbm_budget: int,
@@ -143,14 +180,18 @@ class MemoryPlanner:
                     training_profile: MemoryProfile | None = None,
                     train_steps: int = 1,
                     shrink: str | None = "remat",
-                    max_evict: int = 256):
+                    max_evict: int = 256,
+                    reorder: str | bool | None = None,
+                    incremental: bool = True):
         """Build a ``SharedArena`` over one HBM budget and jointly plan the
         registered tenants.  ``shrink="remat"`` wires the eviction search as
         the training tenant's shrink hook, so evict-vs-share is resolved in
-        the same pass.  Returns the planned ``SharedArena``.
+        the same pass.  ``reorder``/``incremental`` thread through to the
+        joint pass (see ``SharedArena``).  Returns the planned ``SharedArena``.
         """
         from .unified import SharedArena
-        arena = SharedArena(hbm_budget, solver=self.solver)
+        arena = SharedArena(hbm_budget, solver=self.solver, reorder=reorder,
+                            incremental=incremental)
         if serving_profile is not None:
             arena.register_serving(serving_profile)
         if training_profile is not None:

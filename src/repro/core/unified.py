@@ -31,10 +31,11 @@ admission budgets.
 """
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from .bestfit import best_fit
+from .bestfit import best_fit, refit
 from .dsa import AllocationPlan, validate_plan
 from .events import Block, MemoryProfile
 from ..obs.trace import get_tracer
@@ -156,14 +157,30 @@ class SharedArena:
     """One HBM budget partitioned between tenants by a joint best-fit pass."""
 
     def __init__(self, hbm_budget: int, solver=best_fit, *,
-                 max_shrink_rounds: int = 4):
+                 max_shrink_rounds: int = 4,
+                 reorder: str | bool | None = None,
+                 incremental: bool = True):
+        """``reorder`` ("greedy"/"ils"/True) runs the slack-reordering pass
+        over the joint union before packing — advisory when serving tenants
+        replay their original event order, so it defaults to off.
+        ``incremental=True`` warm-starts each union re-pack from the previous
+        one: rectangles stable across the rebalance (matched through the
+        stable ``(tenant, local bid)`` key) keep their joint offsets, so §4.3
+        boundary rebalances and shrink rounds stop paying full-repack cost.
+        """
         self.hbm_budget = int(hbm_budget)
         self.solver = solver
         self.max_shrink_rounds = max_shrink_rounds
+        self.reorder = reorder
+        self.incremental = incremental
         self._tenants: dict[str, _Tenant] = {}
         self._plan: Optional[SharedPlan] = None
+        self._last_union: Optional[tuple] = None   # (profile, plan, bid_map)
         self._dirty = False
         self.n_reopt = 0
+        self.n_incr_packs = 0
+        self.n_full_packs = 0
+        self.last_pack_s = 0.0
         self.replan_causes: dict[str, int] = {}
 
     def _record_cause(self, cause: str, **trace_args) -> None:
@@ -331,6 +348,12 @@ class SharedArena:
                     shrunk = True
             if not shrunk:
                 break
+            # a shrink replaces the training rectangles wholesale; warm-
+            # starting the next union pack from the over-budget layout would
+            # pin survivors at their old offsets (refit's quality bar is
+            # relative to the previous peak — the very peak being shrunk
+            # away), so force the post-shrink pack to start cold
+            self._last_union = None
             shrink_rounds += 1
             if tr is not None:
                 tr.instant("shrink-round", "unified", track="arena",
@@ -410,8 +433,48 @@ class SharedArena:
             clock_end=window * span,
             meta={"kind": "unified", "window_steps": window, "span": span,
                   "envelope": envelope})
-        plan = self.solver(profile)
+        t_pack = _time.perf_counter()
+        pack_mode = "full"
+        if self.reorder:
+            from .reorder import reorder_profile
+            mode = self.reorder if isinstance(self.reorder, str) else "ils"
+            rres = reorder_profile(profile, mode=mode, solver=self.solver)
+            profile, plan = rres.profile, rres.plan
+            pack_mode = "reorder"
+            profile.meta["reorder_improvement"] = rres.stats["improvement"]
+        elif self.incremental and self._last_union is not None:
+            # Re-key the previous union to the new joint bid space through
+            # the stable (tenant, local bid) identity, then warm-start.
+            prev_profile, prev_plan, prev_bid_map = self._last_union
+            prev_by_joint = {b.bid: b for b in prev_profile.blocks}
+            rb, ro = [], {}
+            for key, new_bid in bid_map.items():
+                old_bid = prev_bid_map.get(key)
+                ob = prev_by_joint.get(old_bid) if old_bid is not None else None
+                if ob is None or old_bid not in prev_plan.offsets:
+                    continue
+                rb.append(Block(bid=new_bid, size=ob.size, start=ob.start,
+                                end=ob.end, tag=ob.tag))
+                ro[new_bid] = prev_plan.offsets[old_bid]
+            plan = refit(profile, MemoryProfile(blocks=rb),
+                         AllocationPlan(offsets=ro, peak=prev_plan.peak,
+                                        solver=prev_plan.solver),
+                         solver=self.solver)
+            pack_mode = plan.stats.get("mode", "full")
+        else:
+            plan = self.solver(profile)
         validate_plan(profile, plan)
+        self.last_pack_s = _time.perf_counter() - t_pack
+        if pack_mode == "incremental":
+            self.n_incr_packs += 1
+        else:
+            self.n_full_packs += 1
+        self._last_union = (profile, plan, dict(bid_map))
+        tr2 = get_tracer()
+        if tr2 is not None:
+            tr2.instant("pack-union", "unified", track="arena",
+                        mode=pack_mode, seconds=self.last_pack_s,
+                        joint_peak=plan.peak, n_blocks=profile.n)
 
         # the split: serving (latency-critical) is charged its standalone
         # packing demand; training is charged only what it adds ON TOP of
@@ -442,4 +505,7 @@ class SharedArena:
         p = self.plan()
         return {"hbm_budget": self.hbm_budget, "n_tenants": len(self._tenants),
                 "n_reopt": self.n_reopt,
+                "n_incr_packs": self.n_incr_packs,
+                "n_full_packs": self.n_full_packs,
+                "last_pack_s": self.last_pack_s,
                 "replan_causes": dict(self.replan_causes), **p.summary()}

@@ -16,7 +16,10 @@ recorder already re-derived them — and reports:
   * ``headroom_bytes`` — budget minus observed peak, when a budget is known;
   * ``replan_causes`` — per-cause replan counters (decode-outrun vs
     over-budget vs boundary-rebalance vs oversize/novel blocks), merged
-    from every observed source.
+    from every observed source;
+  * ``peak_ratio_by_cause`` — worst observed peak ratio among observations
+    in which each replan cause had fired, so "which kind of drift actually
+    blows the plan" is a first-class number.
 """
 from __future__ import annotations
 
@@ -106,6 +109,25 @@ class DriftMonitor:
                      causes=dict(getattr(arena, "replan_causes", {})))
 
     # -- reporting ----------------------------------------------------------------
+    def peak_ratio_by_cause(self) -> dict[str, float]:
+        """Worst observed-peak / planned-peak per replan cause.
+
+        An observation counts toward a cause when that cause had fired (count
+        > 0) by the time it was recorded; arena cause counters are cumulative,
+        so this reads as "once decode-outrun replans started happening, how
+        far above plan did the run get".
+        """
+        planned_peak = self.plan.peak
+        if not planned_peak:
+            return {}
+        out: dict[str, float] = {}
+        for o in self.observations:
+            ratio = o.peak / planned_peak
+            for cause, count in o.causes.items():
+                if count:
+                    out[cause] = max(out.get(cause, 0.0), ratio)
+        return out
+
     def report(self) -> dict:
         planned_peak = self.plan.peak
         lb = self.planned.liveness_lower_bound()
@@ -139,6 +161,7 @@ class DriftMonitor:
             "n_observations": len(self.observations),
             "replan_causes": causes,
             "n_replans": sum(causes.values()),
+            "peak_ratio_by_cause": self.peak_ratio_by_cause(),
         }
         if self.budget is not None:
             out["budget"] = self.budget

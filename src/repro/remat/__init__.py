@@ -19,13 +19,16 @@ Typical flow (see also ``runtime.train_lib.plan_remat_policy``):
     policy = RematPolicy.from_eviction(ev)                  # compile
     loss(params, batch, remat=policy)                       # apply
 """
-from .cost_model import HOST_LINK_BW, PEAK_FLOPS, BlockCost, CostModel, block_cost
+from .cost_model import (HOST_LINK_BW, PEAK_FLOPS, BlockCost, CostModel,
+                         block_cost, calibrated_peak_flops,
+                         measured_step_from_bench)
 from .offload import HostOffloadArena
-from .policy import RematPolicy
+from .policy import RematPolicy, pattern_group
 from .search import Eviction, EvictionPlan, evict_block, plan_evictions
 
 __all__ = [
     "BlockCost", "CostModel", "Eviction", "EvictionPlan", "HOST_LINK_BW",
     "HostOffloadArena", "PEAK_FLOPS", "RematPolicy", "block_cost",
-    "evict_block", "plan_evictions",
+    "calibrated_peak_flops", "evict_block", "measured_step_from_bench",
+    "pattern_group", "plan_evictions",
 ]

@@ -12,10 +12,20 @@ time cost:
 
 The knapsack in ``search.py`` spends a time budget to buy packing area;
 this module prices the candidates.
+
+Recompute pricing defaults to the datasheet peak (``PEAK_FLOPS``), which
+overstates achievable throughput — real steps hit a fraction of peak, so
+datasheet pricing makes recompute look cheaper than it is.  When a measured
+step time is available (``measured_step_s`` / ``calibrated_peak_flops``),
+the model prices against *achieved* FLOPs/s = profiled step FLOPs / measured
+seconds instead, falling back to the datasheet number when there is no
+measurement or the profile carries no FLOP counts.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
+from typing import Optional
 
 from ..core.events import Block, MemoryProfile
 from ..core.planner import PEAK_FLOPS_BF16 as PEAK_FLOPS  # one hardware model
@@ -25,6 +35,55 @@ HOST_LINK_BW = 50e9          # bytes/s, device<->host staging (PCIe-class)
 # Cheap-to-recompute elementwise ops get a flat FLOP floor so division by
 # near-zero costs doesn't dominate the benefit ranking.
 _MIN_FLOPS = 1.0
+
+
+def calibrated_peak_flops(profile: MemoryProfile,
+                          measured_step_s: Optional[float],
+                          fallback: float = PEAK_FLOPS) -> float:
+    """Effective FLOPs/s from a measured step time.
+
+    achieved = (sum of profiled per-block FLOPs) / measured seconds.  This is
+    a lower bound on the step's true FLOP count (only materialized blocks are
+    charged), so the returned rate is conservative — recompute looks at most
+    as cheap as it really is.  Falls back to ``fallback`` when there is no
+    measurement, no FLOP metadata, or the measurement is nonsensical.
+    """
+    if not measured_step_s or measured_step_s <= 0:
+        return fallback
+    block_flops = profile.meta.get("block_flops", {})
+    total = sum(float(f) for f in block_flops.values())
+    if total <= 0:
+        return fallback
+    achieved = total / measured_step_s
+    # A "measurement" above datasheet peak means the profile's FLOP count and
+    # the timed region don't describe the same computation — distrust it.
+    return min(achieved, fallback) if achieved > 0 else fallback
+
+
+def measured_step_from_bench(bench, arch: Optional[str] = None,
+                             mode: str = "none") -> Optional[float]:
+    """Pull a measured step time out of a BENCH_remat.json-shaped result.
+
+    ``bench`` is the parsed dict or a path to the JSON file.  Returns the
+    ``step_time_s[mode]`` of the config matching ``arch`` (first config when
+    ``arch`` is None), or None when absent — callers fall back to datasheet
+    pricing.
+    """
+    if isinstance(bench, (str, bytes)):
+        try:
+            with open(bench) as f:
+                bench = json.load(f)
+        except (OSError, ValueError):
+            return None
+    if not isinstance(bench, dict):
+        return None
+    for cfg in bench.get("configs", []):
+        if arch is not None and cfg.get("arch") != arch:
+            continue
+        step = (cfg.get("step_time_s") or {}).get(mode)
+        if step and step > 0:
+            return float(step)
+    return None
 
 
 @dataclass(frozen=True)
@@ -60,15 +119,28 @@ class CostModel:
 
     def __init__(self, costs: dict[int, BlockCost], *,
                  peak_flops: float = PEAK_FLOPS,
-                 host_bw: float = HOST_LINK_BW):
+                 host_bw: float = HOST_LINK_BW,
+                 calibrated: bool = False):
         self.costs = costs
         self.peak_flops = peak_flops
         self.host_bw = host_bw
+        self.calibrated = calibrated     # priced from a measured step time?
 
     @classmethod
     def from_profile(cls, profile: MemoryProfile, *,
                      peak_flops: float = PEAK_FLOPS,
-                     host_bw: float = HOST_LINK_BW) -> "CostModel":
+                     host_bw: float = HOST_LINK_BW,
+                     measured_step_s: Optional[float] = None) -> "CostModel":
+        """Price every block; ``measured_step_s`` (seconds for one step of
+        the profiled computation, e.g. from BENCH_remat.json via
+        ``measured_step_from_bench``) calibrates recompute pricing to the
+        achieved FLOP rate instead of the datasheet peak."""
+        calibrated = False
+        if measured_step_s is not None:
+            eff = calibrated_peak_flops(profile, measured_step_s,
+                                        fallback=peak_flops)
+            calibrated = eff != peak_flops
+            peak_flops = eff
         block_flops = profile.meta.get("block_flops", {})
         costs: dict[int, BlockCost] = {}
         for b in profile.blocks:
@@ -85,7 +157,8 @@ class CostModel:
                 offload_s=2.0 * b.size / host_bw,
                 tag=b.tag,
             )
-        return cls(costs, peak_flops=peak_flops, host_bw=host_bw)
+        return cls(costs, peak_flops=peak_flops, host_bw=host_bw,
+                   calibrated=calibrated)
 
     def __getitem__(self, bid: int) -> BlockCost:
         return self.costs[bid]

@@ -15,7 +15,7 @@ lives in ``offload.py``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Iterable, Optional
 
 import jax
 
@@ -38,6 +38,16 @@ def _prim_of_tag(tag: str) -> Optional[str]:
     return name
 
 
+def pattern_group(tag: str) -> str:
+    """Pattern group of a profiled block — the unit policies can be scoped to.
+
+    Grad-of-scan residuals keep their ``scan:<inner-prim>`` tag as the group
+    (all residuals of one scanned layer pattern move together); everything
+    else groups by its producing primitive.  Untagged blocks (synthetic /
+    recorded traces carry no provenance) share one group."""
+    return tag or "<untagged>"
+
+
 @dataclass(frozen=True)
 class RematPolicy:
     """What to do with activations in the loss path.
@@ -51,6 +61,11 @@ class RematPolicy:
     mode: str = "none"
     recompute_prims: frozenset = field(default_factory=frozenset)
     offload_prims: frozenset = field(default_factory=frozenset)
+    #: Pattern groups (see :func:`pattern_group`) this policy is scoped to.
+    #: Empty = applies everywhere.  Scoping lets one evict search / policy
+    #: target a single scanned-layer pattern while leaving the rest of the
+    #: step untouched.
+    scope: frozenset = field(default_factory=frozenset)
 
     def __post_init__(self):
         if self.mode not in ("none", "full", "policy"):
@@ -77,10 +92,20 @@ class RematPolicy:
         raise TypeError(f"cannot interpret {value!r} as a RematPolicy")
 
     @classmethod
-    def from_eviction(cls, ev: "EvictionPlan") -> "RematPolicy":
-        """Compile the search's selection into a primitive-level policy."""
+    def from_eviction(cls, ev: "EvictionPlan",
+                      scope: Optional[Iterable[str]] = None) -> "RematPolicy":
+        """Compile the search's selection into a primitive-level policy.
+
+        ``scope`` restricts compilation to evictions whose
+        :func:`pattern_group` is in the given set and stamps the policy with
+        that scope (evict searches run with ``groups=...`` pass it through so
+        the compiled policy records what it was allowed to touch).
+        """
+        scope_set = frozenset(scope) if scope is not None else frozenset()
         recompute, offload = set(), set()
         for e in ev.evictions:
+            if scope_set and pattern_group(e.tag) not in scope_set:
+                continue
             prim = _prim_of_tag(e.tag)
             if prim is None:
                 continue
@@ -88,7 +113,30 @@ class RematPolicy:
         if not (recompute or offload):
             return cls.none()
         return cls(mode="policy", recompute_prims=frozenset(recompute),
-                   offload_prims=frozenset(offload))
+                   offload_prims=frozenset(offload), scope=scope_set)
+
+    def restricted_to(self, groups: Iterable[str]) -> "RematPolicy":
+        """Narrow a policy to the given pattern groups.
+
+        Keeps only recompute/offload prims reachable from ``groups`` (via
+        the tag -> prim mapping) and records the scope.  ``none``/``full``
+        modes only gain the scope stamp — ``full`` scoped to groups is
+        resolved by the evict search's candidate filter, not here.
+        """
+        scope_set = frozenset(groups)
+        if self.mode != "policy":
+            return RematPolicy(mode=self.mode,
+                              recompute_prims=self.recompute_prims,
+                              offload_prims=self.offload_prims,
+                              scope=scope_set)
+        allowed = {p for p in (_prim_of_tag(g) for g in scope_set)
+                   if p is not None}
+        recompute = self.recompute_prims & allowed
+        offload = self.offload_prims & allowed
+        if not (recompute or offload):
+            return RematPolicy(mode="none", scope=scope_set)
+        return RematPolicy(mode="policy", recompute_prims=frozenset(recompute),
+                           offload_prims=frozenset(offload), scope=scope_set)
 
     # ---- application --------------------------------------------------------
     @property
@@ -114,7 +162,8 @@ class RematPolicy:
                               policy=self.checkpoint_policy())
 
     def describe(self) -> str:
+        suffix = f" @ {sorted(self.scope)}" if self.scope else ""
         if self.mode == "policy":
             return (f"planned(recompute={sorted(self.recompute_prims)}, "
-                    f"offload={sorted(self.offload_prims)})")
-        return self.mode
+                    f"offload={sorted(self.offload_prims)}){suffix}")
+        return self.mode + suffix

@@ -57,6 +57,15 @@ class EvictionPlan:
     plan: AllocationPlan         # offsets for the transformed profile
     profile: MemoryProfile       # the transformed (post-eviction) profile
     meta: dict = field(default_factory=dict)
+    #: Profile the plan's offsets are valid against.  Equal to ``profile``
+    #: unless the search ran with ``reorder`` and the reordered schedule won,
+    #: in which case this holds the reordered lifetimes (``profile`` keeps
+    #: the as-traced execution order for staging / retracing).
+    packed_profile: Optional[MemoryProfile] = None
+
+    @property
+    def plan_profile(self) -> MemoryProfile:
+        return self.packed_profile if self.packed_profile is not None else self.profile
 
     @property
     def evicted_bids(self) -> set[int]:
@@ -96,12 +105,26 @@ def plan_evictions(profile: MemoryProfile,
                    price_mode: str = "auto",
                    solver: Callable[[MemoryProfile], AllocationPlan] = best_fit,
                    view=None,
+                   reorder: str | bool | None = None,
+                   groups=None,
                    ) -> EvictionPlan:
     """Select evictions until the packed peak meets the target (or stalls).
 
     ``candidate_filter(BlockCost) -> bool`` restricts the search to blocks a
     given mechanism can actually evict (e.g. only primitives an existing
     RematPolicy recomputes).
+
+    ``groups`` — iterable of pattern groups (``remat.policy.pattern_group``):
+    only blocks in those groups are eviction candidates, so one search can
+    target a single scanned-layer pattern.  Composes with
+    ``candidate_filter``.
+
+    ``reorder`` — truthy runs the slack-reordering pass on every trial
+    repack and scores the trial at ``min(identity, reordered)`` peak, so an
+    eviction is bought only if it still pays after compaction.  The returned
+    plan/profile are the winning variant; ``meta["reordered"]`` records
+    whether the reordered schedule won (execution must adopt the order for
+    the peak to be real — see ``core.reorder``).
 
     ``price_mode`` — "auto" prices each candidate at its cheaper mechanism
     (recompute vs offload); "recompute" prices and labels everything as
@@ -119,24 +142,35 @@ def plan_evictions(profile: MemoryProfile,
     if view is not None and target_peak is None and target_ratio is None:
         target_peak = view.budget
     costs = costs or CostModel.from_profile(profile)
-    base_plan = solver(profile)
-    baseline_peak = base_plan.peak
-    if target_peak is None and target_ratio is not None:
-        target_peak = int(baseline_peak * target_ratio)
+
+    def repack(block_map):
+        """Pack one trial; with ``reorder`` keep the cheaper of identity /
+        slack-reordered schedules.  Returns (plan, packed_profile, reordered)."""
+        prof = MemoryProfile(blocks=list(block_map.values()),
+                             retained_bytes=profile.retained_bytes,
+                             clock_end=profile.clock_end, meta=profile.meta)
+        plan = solver(prof)
+        if reorder:
+            from ..core.reorder import reorder_profile
+            res = reorder_profile(prof,
+                                  mode="ils" if reorder is True else reorder,
+                                  solver=solver)
+            if res.plan.peak < plan.peak:
+                return res.plan, res.profile, True
+        return plan, prof, False
 
     blocks = {b.bid: b for b in profile.blocks}
     block_steps = profile.meta.get("block_steps", {})
     next_bid = max(blocks, default=0) + 1
-    cur_plan = base_plan
+    base_plan, base_packed, base_reordered = repack(blocks)
+    baseline_peak = base_plan.peak
+    if target_peak is None and target_ratio is not None:
+        target_peak = int(baseline_peak * target_ratio)
+
+    cur_plan, cur_packed, cur_reordered = base_plan, base_packed, base_reordered
     cur_peak = baseline_peak
     evictions: list[Eviction] = []
     n_tried = 0
-
-    def repack(block_map) -> AllocationPlan:
-        prof = MemoryProfile(blocks=list(block_map.values()),
-                             retained_bytes=profile.retained_bytes,
-                             clock_end=profile.clock_end, meta=profile.meta)
-        return solver(prof)
 
     if price_mode == "recompute":
         cand_cost = lambda c: c.recompute_s
@@ -147,6 +181,10 @@ def plan_evictions(profile: MemoryProfile,
 
     pool = costs.candidates(min_bytes=min_bytes,
                             min_lifetime=_MIN_EVICT_LIFETIME)
+    if groups is not None:
+        from .policy import pattern_group
+        group_set = frozenset(groups)
+        pool = [c for c in pool if pattern_group(c.tag) in group_set]
     if candidate_filter is not None:
         pool = [c for c in pool if candidate_filter(c)]
     if price_mode != "auto":     # re-rank by area per *delivered* cost
@@ -174,7 +212,7 @@ def plan_evictions(profile: MemoryProfile,
         del trial[b.bid]
         for s in stubs:
             trial[s.bid] = s
-        trial_plan = repack(trial)
+        trial_plan, trial_packed, trial_reordered = repack(trial)
         if tr is not None:
             # one evict -> repack -> verify round, accepted or rolled back
             tr.instant("evict-trial", "remat", track="search", bid=b.bid,
@@ -184,7 +222,9 @@ def plan_evictions(profile: MemoryProfile,
             continue
         blocks = trial
         next_bid += 1
-        cur_plan, cur_peak = trial_plan, trial_plan.peak
+        cur_plan, cur_packed, cur_reordered = (trial_plan, trial_packed,
+                                               trial_reordered)
+        cur_peak = trial_plan.peak
         saved = b.size * b.lifetime - sum(s.size * s.lifetime for s in stubs)
         evictions.append(Eviction(bid=b.bid, mode=cand_mode(cand),
                                   saved_area=saved, cost_s=cand_cost(cand),
@@ -209,5 +249,8 @@ def plan_evictions(profile: MemoryProfile,
         target_peak=target_peak,
         plan=cur_plan,
         profile=final_profile,
-        meta={"n_tried": n_tried, "solver": getattr(solver, "__name__", "?")},
+        meta={"n_tried": n_tried, "solver": getattr(solver, "__name__", "?"),
+              "reordered": cur_reordered,
+              **({"groups": sorted(group_set)} if groups is not None else {})},
+        packed_profile=cur_packed if cur_reordered else None,
     )

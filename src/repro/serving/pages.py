@@ -96,12 +96,27 @@ def paged_request_blocks(requests: Sequence[Request], cfg: ModelConfig,
 
 
 def plan_pool(cfg: ModelConfig, sample_trace: Sequence[Request],
-              page_tokens: int, solver=best_fit) -> "PagePlan":
-    """Plan the sample trace and size the pool to the DSA peak."""
+              page_tokens: int, solver=best_fit,
+              reorder: str | bool | None = None) -> "PagePlan":
+    """Plan the sample trace and size the pool to the DSA peak.
+
+    ``reorder`` additionally runs the slack-reordering pass over the
+    staircase profile and reports the reordered peak in the baselines.  The
+    pool is still sized by the identity-order plan: requests arrive in real
+    time, so a reordered schedule is *advisory* for serving (it bounds what a
+    replay-controlled admission order could reach), not a capacity claim.
+    """
     profile = paged_request_blocks(sample_trace, cfg, page_tokens)
     plan = solver(profile)
     pb = page_bytes_for(cfg, page_tokens)
     n_pages = max(1, math.ceil(plan.peak / pb))
+    reorder_baselines = {}
+    if reorder:
+        from ..core.reorder import reorder_profile
+        mode = reorder if isinstance(reorder, str) else "ils"
+        rres = reorder_profile(profile, mode=mode, solver=solver)
+        reorder_baselines = {"reordered_dsa_peak": rres.peak,
+                             "reorder_improvement": rres.stats["improvement"]}
     slab = MemoryProfile(blocks=[
         Block(bid=r.rid, size=align(
             cache_bytes_per_token(cfg) * (r.prompt_len + r.gen_len)
@@ -116,7 +131,8 @@ def plan_pool(cfg: ModelConfig, sample_trace: Sequence[Request],
                                "pool_peak": pool["peak"],
                                "slab_dsa_peak": solver(slab).peak,
                                "paged_dsa_peak": plan.peak,
-                               "lower_bound": profile.liveness_lower_bound()})
+                               "lower_bound": profile.liveness_lower_bound(),
+                               **reorder_baselines})
 
 
 @dataclass(frozen=True)
@@ -144,13 +160,14 @@ class PagePlan:
 
 def choose_page_tokens(cfg: ModelConfig, sample_trace: Sequence[Request],
                        candidates: Sequence[int] = PAGE_TOKEN_CANDIDATES,
-                       solver=best_fit) -> PagePlan:
+                       solver=best_fit,
+                       reorder: str | bool | None = None) -> PagePlan:
     """Profile-guided page-size selection: plan the trace at every candidate
     page size and keep the cheapest (peak + table overhead; ties -> larger
     pages, i.e. smaller tables)."""
     best: Optional[PagePlan] = None
     for pt in sorted(candidates, reverse=True):
-        plan = plan_pool(cfg, sample_trace, pt, solver=solver)
+        plan = plan_pool(cfg, sample_trace, pt, solver=solver, reorder=reorder)
         if best is None or plan.cost() < best.cost():
             best = plan
     assert best is not None
@@ -206,24 +223,30 @@ class PagedKVCache:
                  page_tokens: Optional[int] = None,
                  reserve_pages: int = 0, solver=best_fit,
                  shared: Optional[SharedArena] = None,
-                 tenant_name: str = "serving"):
+                 tenant_name: str = "serving",
+                 reorder: str | bool | None = None,
+                 incremental: bool = True):
         """With ``shared``, the pool stops owning its memory claim: its
         staircase profile is registered as the serving tenant of the
         ``SharedArena``, replans are forwarded as §4.3 requests, and pool
         growth at epoch boundaries is clamped to the tenant's share of the
-        joint budget."""
+        joint budget.  ``reorder`` reports the advisory reordered peak in the
+        plan baselines; ``incremental`` warm-starts the accounting arena's
+        §4.3 replans from the previous plan."""
         self.cfg = cfg
         self.solver = solver
         if page_tokens is None:
-            self.plan = choose_page_tokens(cfg, sample_trace, solver=solver)
+            self.plan = choose_page_tokens(cfg, sample_trace, solver=solver,
+                                           reorder=reorder)
         else:
-            self.plan = plan_pool(cfg, sample_trace, page_tokens, solver=solver)
+            self.plan = plan_pool(cfg, sample_trace, page_tokens,
+                                  solver=solver, reorder=reorder)
         self.page_tokens = self.plan.page_tokens
         self.page_bytes = self.plan.page_bytes
         self.reserve_pages = reserve_pages
         self.n_pages = self.plan.n_pages + reserve_pages
         self.arena = ArenaAllocator(self.plan.profile, solver=solver,
-                                    mode="immediate")
+                                    mode="immediate", incremental=incremental)
         self.tenant: Optional[TenantView] = None
         if shared is not None:
             self.tenant = shared.register_serving(self.plan.profile,
@@ -393,6 +416,9 @@ class PagedKVCache:
             "exec_n_pages": self.exec_n_pages,
             "exec_live_pages": sum(len(t) for t in self.exec_tables.values()),
             "n_reopt": a["n_reopt"],
+            "n_incr_replans": a["n_incr_replans"],
+            "n_full_replans": a["n_full_replans"],
+            "last_replan_s": a["last_replan_s"],
             "planned_peak": a["peak"],
             "max_peak": a["max_peak"],
             "overflow_peak": a["overflow_peak"],

@@ -8,6 +8,10 @@ system actually plans:
   * serving page staircases  (``serving.pages.paged_request_blocks``)
   * remat-evicted profiles   (``remat.search.plan_evictions``)
   * mixed-tenant joint plans (``core.unified.SharedArena``)
+  * slack-reordered profiles (``core.reorder``) — which additionally must
+    preserve every recovered precedence edge, checked here by rebuilding the
+    orig-op -> new-tick map from block bid matching alone (not trusting the
+    reorder pass's own bookkeeping)
 
 Deterministic seeded sweeps always run; when hypothesis is installed (CI
 installs the ``test`` extra) the same generators run as property tests with
@@ -20,7 +24,7 @@ from types import SimpleNamespace
 import pytest
 
 from repro.core import (Block, MemoryProfile, SharedArena, best_fit,
-                        make_profile, solve_exact)
+                        make_profile, refit, reorder_profile, solve_exact)
 from repro.remat import plan_evictions
 from repro.runtime.serve_lib import Request
 from repro.serving.pages import (PagedKVCache, PagePoolExhausted,
@@ -54,6 +58,47 @@ def assert_no_live_overlap(profile: MemoryProfile, plan) -> None:
             addr_overlap = xi < xj + bj.size and xj < xi + bi.size
             assert not (time_overlap and addr_overlap), (
                 f"blocks {bi.bid} and {bj.bid} share bytes while both live")
+
+
+def assert_precedence_preserved(orig: MemoryProfile,
+                                reordered: MemoryProfile) -> None:
+    """Independent precedence checker for slack-reordered profiles.
+
+    Rebuilds the original-op-tick -> new-tick map purely by matching blocks
+    by bid (every block's start and end-1 ticks are op ticks), then asserts:
+
+      * the map is single-valued — two blocks sharing an original op tick
+        must move together;
+      * it agrees with the pass's own ``meta["reorder_ticks"]`` claim;
+      * every recovered precedence edge (recorded dataflow edges plus each
+        block's producer -> last-consumer) stays strictly monotone under it.
+    """
+    new_by_bid = {b.bid: b for b in reordered.blocks}
+    observed: dict[int, int] = {}
+    for b in orig.blocks:
+        nb = new_by_bid[b.bid]
+        assert nb.size == b.size and nb.tag == b.tag
+        for o_tick, n_tick in ((b.start, nb.start), (b.end - 1, nb.end - 1)):
+            prev = observed.setdefault(o_tick, n_tick)
+            assert prev == n_tick, (
+                f"op tick {o_tick} mapped to both {prev} and {n_tick}")
+    claimed = {int(k): int(v)
+               for k, v in reordered.meta.get("reorder_ticks", {}).items()}
+    for o_tick, n_tick in observed.items():
+        assert claimed.get(o_tick, n_tick) == n_tick, (
+            f"reorder_ticks claims {o_tick}->{claimed[o_tick]}, blocks moved "
+            f"to {n_tick}")
+    tick_of = {**observed, **claimed}
+
+    for u, v in orig.meta.get("op_edges", []):
+        if u != v:
+            assert tick_of[u] < tick_of[v], (
+                f"dataflow edge {u}->{v} inverted: "
+                f"{tick_of[u]} !< {tick_of[v]}")
+    for b in orig.blocks:
+        if b.end - 1 > b.start:
+            assert tick_of[b.start] < tick_of[b.end - 1], (
+                f"block {b.bid} ends before it starts after reordering")
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +141,29 @@ def check_evicted(profile: MemoryProfile, max_evict: int) -> None:
     ev = plan_evictions(profile, max_evict=max_evict)
     assert_no_live_overlap(ev.profile, ev.plan)
     assert ev.peak <= ev.baseline_peak
+
+
+def check_reordered(profile: MemoryProfile, seed: int = 0) -> None:
+    res = reorder_profile(profile, mode="ils", rounds=4, seed=seed)
+    assert res.peak <= best_fit(profile).peak     # identity is a candidate
+    assert_no_live_overlap(res.profile, res.plan)
+    assert_precedence_preserved(profile, res.profile)
+
+
+def check_refit(profile: MemoryProfile, seed: int) -> None:
+    """Perturb ~20% of blocks; the warm-started refit must stay sound."""
+    rng = random.Random(seed)
+    prev_plan = best_fit(profile)
+    blocks = list(profile.blocks)
+    for i in rng.sample(range(len(blocks)),
+                        max(1, len(blocks) // 5)):
+        b = blocks[i]
+        blocks[i] = Block(bid=b.bid, size=rng.randint(0, 1 << 14),
+                          start=b.start, end=b.start + rng.randint(1, 15))
+    new_prof = MemoryProfile(blocks=blocks, clock_end=profile.clock_end)
+    plan = refit(new_prof, profile, prev_plan)
+    assert_no_live_overlap(new_prof, plan)
+    assert plan.stats["mode"] in ("incremental", "full")
 
 
 def check_shared(trace, train_profile: MemoryProfile, steps: int) -> None:
@@ -241,6 +309,33 @@ def test_mixed_tenant_shared_plans_never_overlap(seed):
 
 
 @pytest.mark.parametrize("seed", range(6))
+def test_reordered_profiles_preserve_precedence_and_never_overlap(seed):
+    check_reordered(random_profile(seed + 200, 6 + 3 * seed), seed=seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_incremental_refit_never_overlaps(seed):
+    check_refit(random_profile(seed + 300, 10 + 4 * seed), seed)
+
+
+def test_reordered_jaxpr_profile_preserves_dataflow():
+    """The op_edges path: a real traced jaxpr's dataflow chains survive."""
+    import jax.numpy as jnp
+
+    from repro.core import profile_fn
+
+    def f(x):
+        a = x @ x
+        b = jnp.tanh(a)
+        c = a * 2.0            # a consumed twice, at different ticks
+        return (b + c).sum()
+
+    prof = profile_fn(f, jnp.ones((32, 32)))
+    assert prof.meta.get("op_edges"), "profiler stopped recording dataflow"
+    check_reordered(prof)
+
+
+@pytest.mark.parametrize("seed", range(6))
 def test_kv_lifecycle_pages_stay_disjoint(seed):
     check_kv_op_sequence(kv_op_sequence(seed, 60),
                          page_tokens=4 << (seed % 3))
@@ -304,6 +399,16 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=25, deadline=None)
     def test_prop_mixed_tenant_shared_plans_never_overlap(trace, prof, steps):
         check_shared(trace, prof, steps)
+
+    @given(profiles, st.integers(0, 1 << 16))
+    @settings(max_examples=40, deadline=None)
+    def test_prop_reordered_profiles_preserve_precedence(prof, seed):
+        check_reordered(prof, seed=seed)
+
+    @given(profiles, st.integers(0, 1 << 16))
+    @settings(max_examples=40, deadline=None)
+    def test_prop_incremental_refit_never_overlaps(prof, seed):
+        check_refit(prof, seed)
 
     op_programs = st.lists(
         st.tuples(st.sampled_from(["admit", "append", "append", "release"]),

@@ -1,0 +1,207 @@
+"""Slack-reordered lifetimes: greedy vs reordered vs exact (Fig. 4 analogue).
+
+``core.reorder`` recovers a precedence graph from the profile, shifts block
+lifetimes within dependency slack, and packs the result.  The contract under
+test: the identity order is always a candidate (reordered peak <= greedy
+peak, never worse), recovered precedence is respected by every winning
+order, and on instances the branch-and-bound can prove, the gap ladder
+``exact(reordered) <= reordered <= greedy`` holds.
+"""
+import random
+
+import pytest
+
+from repro.core import (MemoryPlanner, MemoryProfile, PrecedenceGraph,
+                        best_fit, make_profile, reorder_profile, solve_exact,
+                        validate_plan)
+from repro.core.reorder import _list_schedule, apply_order
+
+
+def slide_profile(k: int = 4) -> MemoryProfile:
+    """k segments of one long block plus two short independent temporaries;
+    identity co-lives them with the long block, a legal reorder slides the
+    shorts past its end and halves the peak."""
+    items = []
+    t = 0
+    for _ in range(k):
+        items.append((1 << 20, t, t + 4))
+        items.append((1 << 20, t + 1, t + 2))
+        items.append((1 << 20, t + 2, t + 3))
+        t += 5
+    return make_profile(items, alignment=1)
+
+
+def random_profile(seed: int, n: int = 10) -> MemoryProfile:
+    rng = random.Random(seed)
+    items = []
+    for _ in range(n):
+        start = rng.randint(0, 20)
+        items.append((rng.choice([256, 512, 1024, 2048, 4096]),
+                      start, start + rng.randint(1, 12)))
+    return make_profile(items, alignment=1)
+
+
+# ---------------------------------------------------------------------------
+# precedence recovery
+# ---------------------------------------------------------------------------
+
+
+def test_graph_recovers_per_block_edges():
+    prof = make_profile([(100, 0, 4), (200, 1, 2)], alignment=1)
+    g = PrecedenceGraph.from_profile(prof)
+    # ticks: 0, 3 (block 0 start / end-1) and 1 (block 1, start == end-1)
+    assert g.ticks == [0, 1, 3]
+    # only block 0 spans two distinct ops -> exactly one edge
+    assert g.edges == [(0, 2)]
+    assert g.start_op[0] == 0 and g.end_op[0] == 2
+    assert g.start_op[1] == g.end_op[1] == 1
+
+
+def test_graph_uses_recorded_dataflow_edges():
+    prof = MemoryProfile(blocks=[
+        # three 1-tick blocks, chained only through meta dataflow
+        *(make_profile([(64, t, t + 1) for t in (0, 2, 4)],
+                       alignment=1).blocks)],
+        clock_end=5, meta={"op_edges": [[0, 2], [2, 4]]})
+    g = PrecedenceGraph.from_profile(prof)
+    assert g.edges == [(0, 1), (1, 2)]
+    assert g.slack() == [0, 0, 0]          # fully chained: no slack at all
+    res = reorder_profile(prof)
+    assert res.order == [0, 1, 2]          # nothing to move
+    assert res.peak == res.identity_peak
+
+
+def test_backward_op_edges_rejected():
+    # dataflow metadata contradicting the event clock must be refused, not
+    # silently flipped into a wrong precedence
+    prof = MemoryProfile(blocks=list(make_profile(
+        [(64, 0, 1), (64, 2, 3)], alignment=1).blocks),
+        clock_end=3, meta={"op_edges": [[2, 0]]})
+    with pytest.raises(ValueError, match="inconsistent"):
+        PrecedenceGraph.from_profile(prof)
+
+
+def test_list_schedule_raises_on_cycle():
+    g = PrecedenceGraph(ticks=[0, 1], edges=[(0, 1), (1, 0)],
+                        start_op={}, end_op={},
+                        preds=[[1], [0]], succs=[[1], [0]])
+    with pytest.raises(ValueError, match="cycle"):
+        _list_schedule(g, [0, 0], [0, 0])
+
+
+def test_slack_zero_on_critical_path():
+    prof = slide_profile(1)
+    g = PrecedenceGraph.from_profile(prof)
+    slack = g.slack()
+    # the long block's start/end ops are the only chain; the shorts float
+    assert max(slack) > 0
+    bs = g.block_slack(prof)
+    assert bs[0] == (0, 0) or max(bs[0]) <= max(max(v) for v in bs.values())
+
+
+def test_check_order_rejects_edge_violations():
+    g = PrecedenceGraph.from_profile(make_profile([(100, 0, 4)], alignment=1))
+    assert g.check_order([0, 1])
+    assert not g.check_order([1, 0])
+
+
+def test_apply_order_preserves_span_and_sizes():
+    prof = slide_profile(2)
+    g = PrecedenceGraph.from_profile(prof)
+    order = _list_schedule(g, *_loads(g, prof))
+    new = apply_order(prof, g, order)
+    assert new.clock_end == prof.clock_end
+    assert {b.bid: b.size for b in new.blocks} == \
+           {b.bid: b.size for b in prof.blocks}
+    # same tick vocabulary: the new-tick map is a permutation of the op ticks
+    assert new.meta["reordered"] is True
+    assert sorted(new.meta["reorder_ticks"]) == g.ticks
+    assert sorted(new.meta["reorder_ticks"].values()) == g.ticks
+
+
+def _loads(g, prof):
+    alloc = [0] * g.n_ops
+    free = [0] * g.n_ops
+    for b in prof.blocks:
+        alloc[g.start_op[b.bid]] += b.size
+        free[g.end_op[b.bid]] += b.size
+    return alloc, free
+
+
+# ---------------------------------------------------------------------------
+# greedy vs reordered: never worse, strictly better where slack allows
+# ---------------------------------------------------------------------------
+
+
+def test_reorder_halves_peak_on_slide_instance():
+    prof = slide_profile(4)
+    greedy = best_fit(prof)
+    res = reorder_profile(prof)
+    assert greedy.peak == 2 << 20
+    assert res.peak == 1 << 20
+    assert res.improved
+    assert res.graph.check_order(res.order)
+    validate_plan(res.profile, res.plan)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_reordered_never_worse_than_greedy(seed):
+    prof = random_profile(seed)
+    res = reorder_profile(prof, mode="ils", rounds=4, seed=seed)
+    assert res.peak <= best_fit(prof).peak
+    assert res.identity_peak == best_fit(prof).peak
+    assert res.graph.check_order(res.order)
+    validate_plan(res.profile, res.plan)
+
+
+def test_greedy_mode_cheaper_than_ils():
+    prof = random_profile(3, n=20)
+    g = reorder_profile(prof, mode="greedy")
+    i = reorder_profile(prof, mode="ils", rounds=6)
+    assert g.stats["candidates_evaluated"] <= i.stats["candidates_evaluated"]
+    assert i.peak <= g.peak + 0          # ILS explores a superset of greedy
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="unknown reorder mode"):
+        reorder_profile(slide_profile(1), mode="simulated-annealing")
+
+
+# ---------------------------------------------------------------------------
+# the gap ladder vs the exact solver (mirrors test_mip_eviction's structure)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_exact_reordered_greedy_gap_ladder(seed):
+    prof = random_profile(seed + 50, n=7)
+    greedy = best_fit(prof)
+    res = reorder_profile(prof, mode="ils", rounds=4, seed=seed)
+    ex = solve_exact(res.profile)        # exact packing of the chosen order
+    assert res.peak <= greedy.peak
+    assert ex.peak <= res.peak
+    if ex.proven_optimal:
+        # best-fit on the reordered lifetimes stays within the Fig. 4-style
+        # bounded gap of the proven optimum
+        assert res.peak <= 1.5 * ex.peak
+
+
+def test_planner_reorder_entrypoints():
+    prof = slide_profile(3)
+    mp = MemoryPlanner()
+    plain = mp.plan(prof)
+    reordered = mp.plan(prof, reorder="ils")
+    assert reordered.peak <= plain.peak
+    res = mp.plan_reordered(prof, mode=True)     # True coerces to "ils"
+    assert res.peak == reordered.peak
+    assert res.stats["mode"] == "ils"
+
+
+def test_eviction_search_with_reorder_never_worse():
+    from repro.remat import plan_evictions
+    prof = slide_profile(3)
+    plain = plan_evictions(prof, max_evict=2)
+    reordered = plan_evictions(prof, max_evict=2, reorder="greedy")
+    assert reordered.peak <= plain.peak
+    assert "reordered" in reordered.meta
+    validate_plan(reordered.plan_profile, reordered.plan)
